@@ -1,0 +1,62 @@
+"""Paper Fig. 4: effect of the Psi message cap (Gamma_max = 10).
+
+Sweeps Psi and reports accuracy + communication cost (accepted messages).
+Expected trends (paper Sec. 5): tiny Psi starves aggregation and slows
+learning; very large Psi wastes communication with no accuracy gain and
+can oscillate.
+
+  PYTHONPATH=src python -m benchmarks.fig4_psi_sweep --task emnist
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.fig3_convergence import setup
+from repro.core.protocol import build_graph, init_state, run_windows
+
+
+def run(task_name="emnist", psis=(1, 2, 4, 8, 24), windows=600, seed=0,
+        num_clients=None, out_dir="results"):
+    cfg0, train, test, params0, loss, acc, key = setup(task_name, seed, num_clients)
+    tx_, ty_ = test
+    results = {}
+    for psi in psis:
+        cfg = cfg0.replace(psi=int(psi))
+        q, adj = build_graph(cfg)
+        st = init_state(key, cfg, params0)
+        accs = []
+        msgs = 0
+        for seg in range(6):
+            prev_cnt = int(st.accept_count.sum())
+            st = run_windows(st, cfg, q, adj, loss, train, windows // 6)
+            accs.append(float(jax.vmap(lambda p: acc(p, tx_, ty_))(st.params).mean()))
+            msgs += int(st.accept_count.sum())
+        results[int(psi)] = {
+            "final_acc": accs[-1],
+            "best_acc": max(accs),
+            "acc_curve": accs,
+            "osc": float(jnp.std(jnp.diff(jnp.asarray(accs[2:])))) if len(accs) > 3 else 0.0,
+        }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"fig4_{task_name}.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"# Fig4 Psi sweep ({task_name}) -> {path}")
+    print("psi,final_acc,best_acc,oscillation")
+    for psi, r in results.items():
+        print(f"{psi},{r['final_acc']:.4f},{r['best_acc']:.4f},{r['osc']:.4f}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="emnist")
+    ap.add_argument("--windows", type=int, default=600)
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    run(a.task, windows=a.windows, seed=a.seed)

@@ -1,0 +1,139 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # full set
+  PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+
+
+def bench_gossip_mix(quick=False):
+    """Kernel-layer: row-stochastic mixing at paper scale (25 clients,
+    0.57 MB model = ~149k f32 params)."""
+    from repro.core.mixing import mix_dense
+    from repro.kernels.gossip.ops import gossip_mix
+
+    n, d = 25, 149_194
+    key = jax.random.PRNGKey(0)
+    q = jax.nn.softmax(jax.random.normal(key, (n, n)))
+    deltas = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    f = jax.jit(lambda q, x: mix_dense(q, {"w": x})["w"])
+    us = time_fn(f, q, deltas)
+    emit("gossip_mix_xla_25x149k", us, f"{n*n*d*2/us*1e6/1e9:.1f}GFLOPs")
+    if not quick:
+        us_k = time_fn(lambda: gossip_mix(q, deltas[:, :4096], interpret=True),
+                       warmup=1, iters=3)
+        emit("gossip_mix_pallas_interpret_4k", us_k, "correctness-path")
+
+
+def bench_ssd(quick=False):
+    """SSD chunked (dual form) vs sequential recurrence — the Mamba2 layer
+    speed story on the paper's assigned ssm archs."""
+    from repro.models.ssm import ssd_chunked, ssd_reference
+
+    B, T, H, P, G, N = (1, 512, 8, 32, 1, 32) if quick else (2, 1024, 16, 64, 1, 64)
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B_ = jax.random.normal(ks[3], (B, T, G, N))
+    C_ = jax.random.normal(ks[4], (B, T, G, N))
+    D = jnp.ones((H,))
+    f_chunk = jax.jit(lambda *a: ssd_chunked(*a, chunk=128))
+    f_seq = jax.jit(ssd_reference)
+    us_c = time_fn(f_chunk, x, dt, A, B_, C_, D, iters=5)
+    us_s = time_fn(f_seq, x, dt, A, B_, C_, D, iters=5)
+    emit("ssd_chunked_T%d" % T, us_c, f"speedup_vs_seq={us_s/us_c:.2f}x")
+    emit("ssd_sequential_T%d" % T, us_s, "oracle")
+
+
+def bench_draco_window(quick=False):
+    """Protocol-layer: one compiled DRACO superposition window at the
+    paper's experiment scale (N=25 clients, EMNIST-like MLP)."""
+    from benchmarks.fig3_convergence import setup
+    from repro.core.protocol import build_graph, draco_window, init_state
+
+    n = 8 if quick else 25
+    cfg, train, test, params0, loss, acc, key = setup("emnist", num_clients=n)
+    q, adj = build_graph(cfg)
+    st = init_state(key, cfg, params0)
+    step = jax.jit(lambda s: draco_window(s, cfg, q, adj, loss, train))
+    us = time_fn(step, st, iters=5)
+    emit(f"draco_window_N{n}", us, f"{cfg.topology}")
+
+
+def bench_fig3(quick=False):
+    """Fig. 3 (both panels): DRACO vs baselines final accuracy."""
+    from benchmarks.fig3_convergence import run
+
+    for task in (("emnist",) if quick else ("emnist", "poker")):
+        curves = run(task, segments=3 if quick else 6,
+                     seg_windows=60 if quick else 100,
+                     seg_rounds=20 if quick else 30,
+                     num_clients=10 if quick else 25)
+        draco = curves["draco"][-1]
+        best_base = max(c[-1] for m, c in curves.items() if m != "draco")
+        emit(f"fig3_{task}_draco_final_acc", 0.0,
+             f"draco={draco:.3f}_bestbase={best_base:.3f}")
+
+
+def bench_fig4(quick=False):
+    """Fig. 4: Psi sweep — accuracy and oscillation vs message cap."""
+    from benchmarks.fig4_psi_sweep import run
+
+    res = run("emnist", psis=(1, 4, 24) if quick else (1, 2, 4, 8, 24),
+              windows=240 if quick else 600,
+              num_clients=10 if quick else 25)
+    best_psi = max(res, key=lambda p: res[p]["final_acc"])
+    emit("fig4_best_psi", 0.0, f"psi={best_psi}_acc={res[best_psi]['final_acc']:.3f}")
+
+
+def bench_decode(quick=False):
+    """Serving-layer: single-token decode latency, reduced dense arch."""
+    from repro.configs.base import get_reduced
+    from repro.models import model as M
+
+    cfg = get_reduced("qwen2-1.5b")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    B = 4
+    state = M.init_decode_state(cfg, B, 128)
+    tok = jnp.zeros((B,), jnp.int32)
+    step = jax.jit(lambda p, t, s: M.decode_step(p, cfg, t, s))
+    logits, state = step(params, tok, state)  # warm
+    us = time_fn(step, params, tok, state, iters=10)
+    emit("decode_step_reduced_qwen2", us, f"{B/us*1e6:.0f}tok_s")
+
+
+BENCHES = {
+    "gossip": bench_gossip_mix,
+    "ssd": bench_ssd,
+    "draco_window": bench_draco_window,
+    "fig3": bench_fig3,
+    "fig4": bench_fig4,
+    "decode": bench_decode,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        fn(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Quickstart: DRACO at the paper's experiment scale.
+
+25 clients, EMNIST-like federated classification, cycle topology,
+unreliable wireless channel, Psi message cap — the whole Algorithm 1
+pipeline in ~a minute on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.draco_paper import EMNIST
+from repro.core.channel import ChannelConfig
+from repro.core.protocol import (
+    DracoConfig,
+    build_graph,
+    init_state,
+    run_windows,
+    virtual_global_model,
+)
+from repro.data.synthetic import federated_classification, make_mlp
+
+
+def main():
+    t = EMNIST
+    n = 25
+    key = jax.random.PRNGKey(0)
+    k_data, k_model, k_sim = jax.random.split(key, 3)
+
+    print(f"== DRACO quickstart: {n} clients, {t.name}-like task, cycle topology ==")
+    train, test = federated_classification(
+        k_data, n, input_dim=t.input_dim, num_classes=t.num_classes,
+        per_client=t.samples_per_client)
+    params0, apply, loss, acc = make_mlp(k_model, t.input_dim, t.hidden, t.num_classes)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params0))
+    print(f"model: MLP {t.hidden}, {n_params} params "
+          f"(paper CNN: ~{t.message_bytes} B)")
+
+    cfg = DracoConfig(
+        num_clients=n, lr=t.lr, local_batches=t.local_batches,
+        batch_size=t.batch_size, lambda_grad=0.3, lambda_tx=0.3,
+        unify_period=50, psi=6, topology="cycle", max_delay_windows=4,
+        channel=ChannelConfig(message_bytes=t.message_bytes, gamma_max=10.0))
+    q, adj = build_graph(cfg)
+    st = init_state(k_sim, cfg, params0)
+
+    tx_, ty_ = test
+    for seg in range(6):
+        st = run_windows(st, cfg, q, adj, loss, train, 100)
+        per = jax.vmap(lambda p: acc(p, tx_, ty_))(st.params)
+        vg = virtual_global_model(st.params)
+        print(f"window {int(st.window_idx):4d}: mean client acc {float(per.mean()):.3f} "
+              f"(std {float(per.std()):.4f}), virtual-global acc "
+              f"{float(acc(vg, tx_, ty_)):.3f}, msgs this period "
+              f"{int(st.accept_count.sum())}")
+    print("done — decoupled computation/communication, no global clock, "
+          "row-stochastic gossip, Psi-capped reception.")
+
+
+if __name__ == "__main__":
+    main()

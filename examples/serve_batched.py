@@ -1,0 +1,60 @@
+"""Batched serving of a DRACO-unified model.
+
+Simulates a request queue (prompts of mixed length, padded into a batch),
+runs prefill + greedy decode with the KV-cache serve path, and reports
+per-request latency/throughput. Works for dense, SSM (O(1)-state), MoE,
+VLM and audio archs.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch mamba2-2.7b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_reduced
+from repro.launch.serve import serve_batch
+from repro.models import model as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-prompt", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+
+    # request queue: mixed prompt lengths, left-padded into one batch
+    rng = np.random.default_rng(0)
+    lens = rng.integers(4, args.max_prompt, size=args.requests)
+    B, P = args.requests, int(lens.max())
+    prompts = np.zeros((B, P), np.int32)
+    for i, L in enumerate(lens):
+        prompts[i, P - L:] = rng.integers(0, cfg.vocab_size, size=L)
+    prompts = jnp.asarray(prompts)
+    print(f"== serving {B} requests (prompt lens {list(lens)}) with {cfg.name} ==")
+
+    cross = None
+    if cfg.family == "vlm":
+        cross = jax.random.normal(key, (B, cfg.num_patch_tokens, cfg.d_model))
+
+    t0 = time.time()
+    toks = serve_batch(cfg, params, prompts, args.new_tokens, cross_embeds=cross)
+    jax.block_until_ready(toks)
+    dt = time.time() - t0
+    for i in range(B):
+        print(f"req {i}: prompt_len={lens[i]:3d} -> {np.asarray(toks[i])[:8]}...")
+    print(f"aggregate: {B * args.new_tokens / dt:.1f} tok/s "
+          f"({dt / args.new_tokens * 1e3:.0f} ms/decode-step for batch {B})")
+    assert np.isfinite(np.asarray(toks)).all()
+
+
+if __name__ == "__main__":
+    main()

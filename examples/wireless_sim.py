@@ -1,0 +1,103 @@
+"""Faithful continuous-time DRACO simulation (paper Algorithm 2).
+
+Unlike the compiled superposition-window engine (repro.core.protocol),
+this example runs the *exact* event-driven timeline: per-client Poisson
+event lists are generated, merged and sorted (Alg. 2 lines 1-15), then
+processed one event at a time with real-valued SINR transmission delays —
+the reference semantics the windowed engine approximates.
+
+  PYTHONPATH=src python examples/wireless_sim.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import ChannelConfig, place_nodes, transmission_delays
+from repro.core.events import event_list
+from repro.core.topology import adjacency
+from repro.data.synthetic import federated_classification, make_mlp
+
+
+def main():
+    n, horizon = 10, 400.0
+    lam_grad = lam_tx = 0.1
+    unify_period = 100.0
+    psi = 4
+    chan = ChannelConfig(message_bytes=51_640, gamma_max=10.0)
+
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    train, test = federated_classification(k1, n, input_dim=10, num_classes=5,
+                                           per_client=300)
+    xs, ys = train
+    tx_t, ty_t = test
+    params0, apply, loss_fn, acc = make_mlp(k2, 10, (32,), 5)
+    grad_fn = jax.jit(jax.grad(loss_fn))
+
+    adj = np.asarray(adjacency("cycle", n))
+    pos = place_nodes(k3, n, chan)
+    rng = np.random.default_rng(0)
+
+    evs = event_list(rng, n, horizon, lam_grad, lam_tx, unify_period)
+    print(f"== event-driven DRACO: {len(evs)} events over {horizon}s, {n} clients ==")
+
+    params = [jax.tree_util.tree_map(lambda x: x.copy(), params0) for _ in range(n)]
+    pending = [jax.tree_util.tree_map(jnp.zeros_like, params0) for _ in range(n)]
+    inflight = []  # (arrive_t, dst, weight, delta)
+    accepted = np.zeros(n, int)
+    period_start = 0.0
+    lr, bs = 0.1, 32
+    stats = {"grad": 0, "tx": 0, "delivered": 0, "dropped_deadline": 0,
+             "dropped_psi": 0, "unify": 0}
+
+    for ev in evs:
+        # deliveries due before this event
+        for msg in [m for m in inflight if m[0] <= ev.t]:
+            inflight.remove(msg)
+            _, dst, w, delta = msg
+            if accepted[dst] >= psi:
+                stats["dropped_psi"] += 1
+                continue
+            params[dst] = jax.tree_util.tree_map(
+                lambda p, d: p + w * d, params[dst], delta)
+            accepted[dst] += 1
+            stats["delivered"] += 1
+
+        if ev.t - period_start >= unify_period:
+            accepted[:] = 0
+            period_start += unify_period
+
+        i = ev.client
+        if ev.kind == "grad":
+            idx = rng.integers(0, xs.shape[1], size=bs)
+            g = grad_fn(params[i], xs[i, idx], ys[i, idx])
+            delta = jax.tree_util.tree_map(lambda gg: -lr * gg, g)
+            pending[i] = jax.tree_util.tree_map(lambda a, b: a + b, pending[i], delta)
+            stats["grad"] += 1
+        elif ev.kind == "tx":
+            tx_mask = jnp.zeros(n, bool).at[i].set(True)
+            gamma, succ = transmission_delays(
+                jax.random.fold_in(key, int(ev.t * 1e3) % (2**31)), pos, tx_mask, chan)
+            nbrs = np.where(adj[i])[0]
+            w = 1.0 / max(len(nbrs), 1)  # row-stochastic split
+            for j in nbrs:
+                if bool(succ[i, j]):
+                    inflight.append((ev.t + float(gamma[i, j]), int(j), w, pending[i]))
+                else:
+                    stats["dropped_deadline"] += 1
+            pending[i] = jax.tree_util.tree_map(jnp.zeros_like, pending[i])
+            stats["tx"] += 1
+        elif ev.kind == "unify":
+            for j in range(n):
+                if j != i:
+                    params[j] = jax.tree_util.tree_map(lambda x: x.copy(), params[i])
+            stats["unify"] += 1
+
+    accs = [float(acc(p, tx_t, ty_t)) for p in params]
+    print(f"events: {stats}")
+    print(f"final mean client accuracy: {np.mean(accs):.3f} (std {np.std(accs):.4f})")
+    assert np.mean(accs) > 0.3
+
+
+if __name__ == "__main__":
+    main()

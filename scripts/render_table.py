@@ -1,0 +1,50 @@
+"""Render results/dryrun.jsonl into the EXPERIMENTS.md roofline table."""
+import json
+import sys
+from collections import OrderedDict
+
+
+def fmt_bytes(b):
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if b >= div:
+            return f"{b/div:.1f}{unit}"
+    return f"{b:.0f}B"
+
+
+def main(path="results/dryrun.jsonl", mesh_filter=None, variants=False):
+    rows = OrderedDict()
+    for line in open(path):
+        r = json.loads(line)
+        is_variant = (r.get("mix_mode", "dense") != "dense" or r.get("psi", 0) != 0
+                      or r.get("mix_dtype", "f32") != "f32"
+                      or r.get("blocked_threshold", 8192) != 8192
+                      or r.get("cache_shard", "kv_heads") != "kv_heads")
+        if is_variant != variants:
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        key = (r["arch"], r["shape"], r["mesh"], r.get("mix_mode"), r.get("psi"),
+               r.get("mix_dtype"), r.get("blocked_threshold"))
+        rows[key] = r  # last write wins
+
+    print("| arch | shape | mesh | mode | t_comp | t_mem | t_coll | bound | "
+          "MODEL_FLOPs | useful | temp/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows.values():
+        temp = r["memory_analysis"].get("temp_size_in_bytes") or 0
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['mode']} | "
+              f"{r['t_compute_s']*1e3:.1f}ms | {r['t_memory_s']*1e3:.1f}ms | "
+              f"{r['t_collective_s']*1e3:.1f}ms | {r['bottleneck']} | "
+              f"{r['model_flops']:.2e} | {r['useful_flops_ratio']:.2f} | "
+              f"{fmt_bytes(temp)} |")
+    print(f"\n{len(rows)} rows")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="results/dryrun.jsonl")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--variants", action="store_true")
+    a = ap.parse_args()
+    main(a.path, a.mesh, a.variants)

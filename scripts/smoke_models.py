@@ -1,0 +1,33 @@
+import jax, jax.numpy as jnp
+from repro.configs.base import ARCH_IDS, get_reduced
+from repro.models.registry import build_model
+
+key = jax.random.PRNGKey(0)
+for arch in ARCH_IDS:
+    cfg = get_reduced(arch)
+    m = build_model(cfg)
+    params = m.init(key)
+    B, S = 2, 64
+    batch = {}
+    if cfg.embeds_in:
+        batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model))
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        batch["cross_embeds"] = jax.random.normal(key, (B, cfg.num_patch_tokens, cfg.d_model))
+    logits, aux = m.apply(params, batch)
+    loss = m.loss(params, batch)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    assert logits.shape == (B, S, cfg.vocab_size), (arch, logits.shape)
+    assert jnp.isfinite(logits).all(), arch
+    # decode
+    st = m.init_decode_state(B, 32)
+    cross_kv = None
+    if cfg.family == "vlm":
+        cross_kv = m.init_cross_kv(params, batch["cross_embeds"])
+    tok = jnp.zeros((B,), jnp.int32) if not cfg.embeds_in else jax.random.normal(key, (B, 1, cfg.d_model))
+    lg, st2 = m.decode_step(params, tok, st, cross_kv)
+    assert lg.shape == (B, cfg.vocab_size) and jnp.isfinite(lg).all(), arch
+    print(f"OK {arch:24s} loss={float(loss):.3f} params={n_params}")
+print("ALL MODELS OK")

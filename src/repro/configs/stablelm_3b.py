@@ -1,0 +1,32 @@
+"""stablelm-3b — dense GQA [hf:stabilityai/stablelm-2-1_6b family].
+
+32L d_model=2560 32H (GQA kv=32) d_ff=6912 vocab=50304.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b",
+    family="dense",
+    num_layers=32,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=6912,
+    vocab_size=50304,
+    rope_theta=10000.0,
+    norm_eps=1e-5,
+    source="hf:stabilityai/stablelm-2-1_6b",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_(
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=512,
+        vocab_size=512,
+        dtype="float32",
+        remat=False,
+    )

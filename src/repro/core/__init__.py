@@ -1,0 +1,19 @@
+from repro.core.protocol import (
+    DracoConfig,
+    DracoState,
+    build_graph,
+    draco_window,
+    init_state,
+    run_windows,
+    virtual_global_model,
+)
+
+__all__ = [
+    "DracoConfig",
+    "DracoState",
+    "build_graph",
+    "draco_window",
+    "init_state",
+    "run_windows",
+    "virtual_global_model",
+]

@@ -1,0 +1,184 @@
+"""The paper's four comparison baselines (Sec. 5):
+
+  - sync-symm : synchronous decentralized SGD w/ symmetric doubly-
+                stochastic mixing (Choco-SGD-style exact communication)
+  - sync-push : synchronous push-sum over the directed graph
+  - async-symm: asynchronous (partial participation + delay deadline)
+                with symmetric mixing among surviving links
+  - async-push: asynchronous push-sum gossip (Digest-style)
+
+All share DRACO's local-SGD machinery so comparisons isolate the
+*communication protocol*, not the optimizer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as channel_lib
+from repro.core.channel import ChannelConfig
+from repro.core.protocol import DracoConfig, local_updates
+from repro.core.topology import adjacency, metropolis, row_stochastic
+
+
+class BaselineState(NamedTuple):
+    params: Any  # (N, ...)
+    push_weight: jax.Array  # (N,) push-sum weights (1.0 for symm methods)
+    key: jax.Array
+    round_idx: jax.Array
+    positions: jax.Array
+
+
+def init_baseline_state(key, cfg: DracoConfig, params0) -> BaselineState:
+    n = cfg.num_clients
+    kp, ks = jax.random.split(key)
+    params = jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (n,) + p.shape).copy(), params0
+    )
+    pos = channel_lib.place_nodes(kp, n, cfg.channel or ChannelConfig())
+    return BaselineState(
+        params=params,
+        push_weight=jnp.ones((n,)),
+        key=ks,
+        round_idx=jnp.zeros((), jnp.int32),
+        positions=pos,
+    )
+
+
+def _link_success(key, state, cfg, adj, tx_mask):
+    """Per-round surviving directed links (i->j) incl. channel drops."""
+    if cfg.channel is not None and cfg.channel.enabled:
+        _, success = channel_lib.transmission_delays(
+            key, state.positions, tx_mask, cfg.channel
+        )
+        return success & adj
+    return adj & tx_mask[:, None]
+
+
+def _mix_rows(w, params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.einsum("ij,j...->i...", w.astype(jnp.float32), p.astype(jnp.float32)).astype(p.dtype),
+        params,
+    )
+
+
+def sync_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data):
+    """D-SGD with Metropolis weights; dropped links' mass folds into self."""
+    n = cfg.num_clients
+    k_next, k_g, k_c = jax.random.split(state.key, 3)
+    all_on = jnp.ones((n,), bool)
+    delta = local_updates(k_g, state.params, all_on, cfg, loss_fn, data)
+    params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
+    succ = _link_success(k_c, state, cfg, adj, all_on)
+    succ = succ & succ.T  # symmetric methods need bidirectional links
+    w = jnp.where(succ & ~jnp.eye(n, dtype=bool), w_sym, 0.0)
+    # dropped links' weight folds back into the self-loop (keeps w row-stoch.)
+    w = jnp.where(jnp.eye(n, dtype=bool), 1.0 - w.sum(axis=1, keepdims=True), w)
+    params = _mix_rows(w, params)
+    return state._replace(params=params, key=k_next, round_idx=state.round_idx + 1)
+
+
+def sync_push_round(state: BaselineState, cfg, adj, loss_fn, data):
+    """Synchronous push-sum (stochastic gradient push, Assran et al.)."""
+    n = cfg.num_clients
+    k_next, k_g, k_c = jax.random.split(state.key, 3)
+    all_on = jnp.ones((n,), bool)
+    delta = local_updates(k_g, state.params, all_on, cfg, loss_fn, data)
+    params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
+    succ = _link_success(k_c, state, cfg, adj, all_on)
+    # column-stochastic P: sender splits mass over (self + successful out-links)
+    out = succ.astype(jnp.float32)
+    col = out + jnp.eye(n)
+    colP = col / col.sum(axis=1, keepdims=True)  # row i: how i splits its mass
+    # z_j = sum_i colP[i,j] * z_i  (transpose mixing)
+    params = _mix_rows(colP.T, params)
+    w = colP.T @ state.push_weight
+    de_biased = jax.tree_util.tree_map(
+        lambda p: (p.astype(jnp.float32) / w.reshape((n,) + (1,) * (p.ndim - 1))).astype(p.dtype),
+        params,
+    )
+    return state._replace(params=params, push_weight=w, key=k_next,
+                          round_idx=state.round_idx + 1), de_biased
+
+
+def async_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data,
+                     p_active: float = 0.5):
+    """Async decentralized SGD w/ delay deadline [15]: only a random subset
+    is active per round; symmetric mixing among surviving active links."""
+    n = cfg.num_clients
+    k_next, k_a, k_g, k_c = jax.random.split(state.key, 4)
+    active = jax.random.uniform(k_a, (n,)) < p_active
+    delta = local_updates(k_g, state.params, active, cfg, loss_fn, data)
+    params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
+    succ = _link_success(k_c, state, cfg, adj, active)
+    succ = succ & succ.T & active[:, None] & active[None, :]
+    w = jnp.where(succ, w_sym, 0.0)
+    w = jnp.where(jnp.eye(n, dtype=bool), 1.0 - w.sum(axis=1), w)
+    params = _mix_rows(w, params)
+    return state._replace(params=params, key=k_next, round_idx=state.round_idx + 1)
+
+
+def async_push_round(state: BaselineState, cfg, adj, loss_fn, data,
+                     p_active: float = 0.5):
+    """Asynchronous push-sum gossip (Digest-style [50]): active clients
+    push half their mass, split across successful out-neighbors."""
+    n = cfg.num_clients
+    k_next, k_a, k_g, k_c = jax.random.split(state.key, 4)
+    active = jax.random.uniform(k_a, (n,)) < p_active
+    delta = local_updates(k_g, state.params, active, cfg, loss_fn, data)
+    params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
+    succ = _link_success(k_c, state, cfg, adj, active)
+    out = succ.astype(jnp.float32)
+    outdeg = out.sum(axis=1, keepdims=True)
+    send = jnp.where(outdeg > 0, 0.5 * out / jnp.maximum(outdeg, 1e-9), 0.0)
+    keep = jnp.where(outdeg[:, 0] > 0, 0.5, 1.0)
+    P = send + jnp.diag(keep)  # row-(sub)stochastic mass split
+    params = _mix_rows(P.T, params)
+    w = P.T @ state.push_weight
+    de_biased = jax.tree_util.tree_map(
+        lambda p: (p.astype(jnp.float32) / w.reshape((n,) + (1,) * (p.ndim - 1))).astype(p.dtype),
+        params,
+    )
+    return state._replace(params=params, push_weight=w, key=k_next,
+                          round_idx=state.round_idx + 1), de_biased
+
+
+BASELINES = ("sync-symm", "sync-push", "async-symm", "async-push")
+
+
+@partial(jax.jit, static_argnames=("method", "cfg", "loss_fn", "num_rounds"))
+def run_baseline(method: str, state, cfg: DracoConfig, loss_fn, data,
+                 num_rounds: int, graph_key=None):
+    adj = adjacency(cfg.topology, cfg.num_clients, key=graph_key)
+    w_sym = metropolis(adj)
+
+    def step(s, _):
+        if method == "sync-symm":
+            s = sync_symm_round(s, cfg, w_sym, adj, loss_fn, data)
+        elif method == "sync-push":
+            s, _ = sync_push_round(s, cfg, adj, loss_fn, data)
+        elif method == "async-symm":
+            s = async_symm_round(s, cfg, w_sym, adj, loss_fn, data)
+        elif method == "async-push":
+            s, _ = async_push_round(s, cfg, adj, loss_fn, data)
+        else:
+            raise ValueError(method)
+        return s, None
+
+    state, _ = jax.lax.scan(step, state, None, length=num_rounds)
+    return state
+
+
+def eval_params(method: str, state: BaselineState):
+    """Method-appropriate evaluation params (push methods de-bias)."""
+    if method.endswith("push"):
+        n = state.push_weight.shape[0]
+        return jax.tree_util.tree_map(
+            lambda p: (p.astype(jnp.float32) / state.push_weight.reshape((n,) + (1,) * (p.ndim - 1))).astype(p.dtype),
+            state.params,
+        )
+    return state.params

@@ -1,0 +1,77 @@
+"""Unreliable wireless channel model (paper Sec. 5).
+
+Transmission time from i to j:
+    Gamma_ij = msg_bytes*8 / (W log2(1 + SINR_ij)) + dist(i,j)/c
+    SINR_ij  = P h_ij d_ij^-a / (sum_{n in interferers(j)} P h_nj d_nj^-a + z^2)
+with Rayleigh fading h ~ exp(1) resampled per transmission. A message is
+lost iff Gamma_ij > Gamma_max. Nodes interfere when within 0.1*R.
+
+Defaults follow the paper: R=500 m, P=30 dBm, alpha=4, W=10 MHz,
+N0=-174 dBm/Hz.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+LIGHTSPEED = 3.0e8
+
+
+@dataclass(frozen=True)
+class ChannelConfig:
+    radius: float = 500.0  # m
+    tx_power_dbm: float = 30.0
+    path_loss_exp: float = 4.0
+    bandwidth_hz: float = 10e6
+    noise_dbm_hz: float = -174.0
+    interference_radius_frac: float = 0.1
+    message_bytes: int = 596_776
+    gamma_max: float = 10.0  # s, delay deadline
+    enabled: bool = True
+
+    @property
+    def tx_power_w(self) -> float:
+        return 10 ** (self.tx_power_dbm / 10) / 1e3
+
+    @property
+    def noise_w(self) -> float:
+        return 10 ** (self.noise_dbm_hz / 10) / 1e3 * self.bandwidth_hz
+
+
+def place_nodes(key, n: int, cfg: ChannelConfig) -> jax.Array:
+    """Uniform positions in a disk of radius R. (n, 2)."""
+    k1, k2 = jax.random.split(key)
+    r = cfg.radius * jnp.sqrt(jax.random.uniform(k1, (n,)))
+    th = 2 * jnp.pi * jax.random.uniform(k2, (n,))
+    return jnp.stack([r * jnp.cos(th), r * jnp.sin(th)], axis=-1)
+
+
+def pairwise_dist(pos) -> jax.Array:
+    d = jnp.linalg.norm(pos[:, None, :] - pos[None, :, :], axis=-1)
+    return jnp.maximum(d, 1.0)  # clamp to 1 m (avoid singular path loss)
+
+
+def transmission_delays(key, pos, tx_mask, cfg: ChannelConfig):
+    """Sample per-link delay Gamma (n, n) [seconds] and success mask.
+
+    tx_mask (n,) marks concurrently transmitting nodes (they interfere).
+    Returns (gamma (n,n), success (n,n) bool) where entry [i, j] refers to
+    the link i -> j. success = Gamma <= gamma_max and i actually transmits.
+    """
+    n = pos.shape[0]
+    dist = pairwise_dist(pos)  # (n, n) dist[i, j]
+    h = jax.random.exponential(key, (n, n))  # fading per link
+    p_rx = cfg.tx_power_w * h * dist ** (-cfg.path_loss_exp)  # [i,j]: power of i at j
+
+    # interferers of receiver j: transmitting nodes n != i within 0.1R of j
+    close = dist <= cfg.interference_radius_frac * cfg.radius  # [n, j]
+    interf_all = jnp.einsum("nj,n->j", (close & tx_mask[:, None]).astype(jnp.float32) * p_rx.astype(jnp.float32), jnp.ones((n,)))
+    # subtract own signal when i itself is close to j
+    interf = interf_all[None, :] - jnp.where(close & tx_mask[:, None], p_rx, 0.0)
+    sinr = p_rx / (jnp.maximum(interf, 0.0) + cfg.noise_w)
+    rate = cfg.bandwidth_hz * jnp.log2(1.0 + sinr)
+    gamma = (cfg.message_bytes * 8) / jnp.maximum(rate, 1e-9) + dist / LIGHTSPEED
+    success = (gamma <= cfg.gamma_max) & tx_mask[:, None]
+    return gamma, success

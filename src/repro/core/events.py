@@ -1,0 +1,68 @@
+"""Continuous-timeline Poisson event machinery (paper Sec. 2.3, Assump. 1).
+
+Two views of the same point process:
+
+1. ``event_list``      — exact event-driven timeline (numpy; the faithful
+   Algorithm-2 simulator in ``examples/`` and tests uses this).
+2. ``window_masks``    — superposition-window discretization: for a window
+   of length w, each client fires iff its Poisson process has >= 1 point
+   in the window (P = 1 - exp(-lambda w)). This is the JAX-compiled view;
+   the superposition window is the paper's own grouping device (Sec. 2.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def window_event_probs(lam, window: float):
+    """P(at least one event in a window) per client."""
+    return 1.0 - jnp.exp(-jnp.asarray(lam) * window)
+
+
+def sample_event_masks(key, lam, window: float, n: int):
+    """(n,) bool — Poisson thinning to the superposition window."""
+    p = window_event_probs(lam, window)
+    p = jnp.broadcast_to(p, (n,))
+    return jax.random.uniform(key, (n,)) < p
+
+
+def sample_event_counts(key, lam, window: float, n: int, max_count: int = 8):
+    """(n,) int — number of events in the window (truncated Poisson)."""
+    lamw = jnp.broadcast_to(jnp.asarray(lam) * window, (n,))
+    return jnp.clip(jax.random.poisson(key, lamw), 0, max_count)
+
+
+@dataclass
+class Event:
+    t: float
+    client: int
+    kind: str  # "grad" | "tx" | "unify"
+
+
+def event_list(rng: np.random.Generator, n: int, horizon: float,
+               lam_grad, lam_tx, unify_period: float = 0.0) -> List[Event]:
+    """Exact merged continuous-time event list (Algorithm 2 lines 1-15)."""
+    lam_grad = np.broadcast_to(np.asarray(lam_grad, np.float64), (n,))
+    lam_tx = np.broadcast_to(np.asarray(lam_tx, np.float64), (n,))
+    events: List[Event] = []
+    for i in range(n):
+        for lam, kind in ((lam_grad[i], "grad"), (lam_tx[i], "tx")):
+            if lam <= 0:
+                continue
+            t = rng.exponential(1.0 / lam)
+            while t < horizon:
+                events.append(Event(float(t), i, kind))
+                t += rng.exponential(1.0 / lam)
+    if unify_period and unify_period > 0:
+        k = 1
+        while k * unify_period < horizon:
+            hub = int(rng.integers(0, n))
+            events.append(Event(float(k * unify_period), hub, "unify"))
+            k += 1
+    events.sort(key=lambda e: e.t)
+    return events

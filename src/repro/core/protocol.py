@@ -1,0 +1,233 @@
+"""DRACO: the decentralized asynchronous protocol (Algorithm 1/2).
+
+Compiled simulation over *superposition windows* (the paper's own
+discretization device, Sec. 2.2): one `draco_window` = one jit step.
+Within a window each client independently (Poisson thinning):
+
+  - fires a *gradient event*: B local SGD batches -> accumulates a pending
+    update Delta (backups accumulate between transmissions, Lemma A.1);
+  - fires a *transmission event*: broadcasts its pending Delta through the
+    (optional) unreliable wireless channel; per-link delays are quantized
+    to windows and routed through a ring delay-buffer;
+  - receives: messages arriving this window are aggregated with the
+    row-stochastic weights, x_j += sum_i q[i,j] Delta_i, subject to the
+    Psi cap (Definition 1);
+  - periodic unification: every P windows a rotating hub broadcasts its
+    reference model and every client adopts it (x_j <- x_hub).
+
+Computation and communication schedules are fully decoupled: the grad and
+tx processes are independent, and nothing ever waits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as channel_lib
+from repro.core import mixing
+from repro.core.channel import ChannelConfig
+from repro.core.events import sample_event_masks
+from repro.core.topology import adjacency, row_stochastic
+
+
+@dataclass(frozen=True)
+class DracoConfig:
+    num_clients: int = 25
+    lr: float = 0.05  # gamma
+    local_batches: int = 1  # B
+    batch_size: int = 64
+    window: float = 1.0  # superposition window length (s)
+    lambda_grad: float = 0.1  # Assumption 1 rate (paper default)
+    lambda_tx: float = 0.1
+    unify_period: int = 50  # P, in windows (0 = no unification)
+    psi: int = 0  # max accepted msgs / client / period (0 = unbounded)
+    topology: str = "cycle"
+    max_delay_windows: int = 4  # ring buffer depth D (>= 2)
+    apply_self_update: bool = False  # paper: senders do NOT apply own Delta
+    channel: Optional[ChannelConfig] = None
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+class DracoState(NamedTuple):
+    params: Any  # leaves (N, ...)
+    pending: Any  # accumulated untransmitted local updates (N, ...)
+    buffer: Any  # in-flight weighted deltas (D, N, ...)
+    accept_count: jax.Array  # (N,) messages accepted this period
+    window_idx: jax.Array  # scalar int32
+    key: jax.Array
+    positions: jax.Array  # (N, 2) node coordinates (channel model)
+
+
+def init_state(key, cfg: DracoConfig, params0) -> DracoState:
+    """params0: single-client param pytree -> replicated across N clients."""
+    n, d = cfg.num_clients, cfg.max_delay_windows
+    kp, ks = jax.random.split(key)
+    params = jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (n,) + p.shape).copy(), params0
+    )
+    pending = jax.tree_util.tree_map(jnp.zeros_like, params)
+    buffer = jax.tree_util.tree_map(
+        lambda p: jnp.zeros((d,) + p.shape, p.dtype), params
+    )
+    pos = channel_lib.place_nodes(kp, n, cfg.channel or ChannelConfig())
+    return DracoState(
+        params=params,
+        pending=pending,
+        buffer=buffer,
+        accept_count=jnp.zeros((n,), jnp.int32),
+        window_idx=jnp.zeros((), jnp.int32),
+        key=ks,
+        positions=pos,
+    )
+
+
+def local_updates(key, params, grad_mask, cfg, loss_fn, data):
+    """Per-client B-batch local SGD; returns Delta pytree (N, ...)."""
+    xs, ys = data
+    n = cfg.num_clients
+
+    def one_client(p_i, key_i, x_i, y_i):
+        def body(p, k):
+            idx = jax.random.randint(k, (cfg.batch_size,), 0, x_i.shape[0])
+            g = jax.grad(loss_fn)(p, x_i[idx], y_i[idx])
+            return jax.tree_util.tree_map(lambda a, b: a - cfg.lr * b, p, g), None
+
+        keys = jax.random.split(key_i, cfg.local_batches)
+        y_b, _ = jax.lax.scan(body, p_i, keys)
+        return jax.tree_util.tree_map(lambda yb, p: yb - p, y_b, p_i)
+
+    keys = jax.random.split(key, n)
+    delta = jax.vmap(one_client)(params, keys, xs, ys)
+    gm = grad_mask.astype(jnp.float32)
+    return jax.tree_util.tree_map(
+        lambda dl: dl * gm.reshape((n,) + (1,) * (dl.ndim - 1)), delta
+    )
+
+
+def _psi_accept(key, success, accept_count, psi: int):
+    """Per-(sender, receiver) acceptance under the Psi cap.
+
+    Random sender priority; receiver j accepts while its period count +
+    rank < psi. Returns (accept mask (N,N), new accept_count)."""
+    n = success.shape[0]
+    arrivals = success.astype(jnp.int32)
+    if psi <= 0:
+        return success, accept_count + arrivals.sum(axis=0)
+    perm = jax.random.permutation(key, n)  # sender priority order
+    inv = jnp.argsort(perm)
+    s_perm = arrivals[perm]  # reorder senders
+    rank = jnp.cumsum(s_perm, axis=0) - s_perm  # msgs ahead of me (per recv)
+    ok_perm = (rank + accept_count[None, :] < psi) & (s_perm > 0)
+    ok = ok_perm[inv]
+    new_count = accept_count + ok.sum(axis=0).astype(jnp.int32)
+    return ok & success, new_count
+
+
+def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data):
+    """One superposition window. Returns new state."""
+    n, D = cfg.num_clients, cfg.max_delay_windows
+    key = state.key
+    keys = jax.random.split(key, 8)
+    k_next, k_grad, k_gsel, k_tx, k_chan, k_psi, k_hub, _ = keys
+    widx = state.window_idx
+
+    # --- 1. deliveries: drain this window's buffer slot -------------------
+    slot = jnp.mod(widx, D)
+    arrivals = jax.tree_util.tree_map(lambda b: b[slot], state.buffer)
+    params = jax.tree_util.tree_map(
+        lambda p, a: p + a.astype(p.dtype), state.params, arrivals
+    )
+    buffer = jax.tree_util.tree_map(
+        lambda b: b.at[slot].set(jnp.zeros_like(b[slot])), state.buffer
+    )
+
+    # --- 2. gradient events ------------------------------------------------
+    grad_mask = sample_event_masks(k_grad, cfg.lambda_grad, cfg.window, n)
+    delta = local_updates(k_gsel, params, grad_mask, cfg, loss_fn, data)
+    pending = jax.tree_util.tree_map(lambda a, b: a + b, state.pending, delta)
+    if cfg.apply_self_update:
+        params = jax.tree_util.tree_map(lambda p, dl: p + dl.astype(p.dtype), params, delta)
+
+    # --- 3. transmission events + channel ----------------------------------
+    tx_mask = sample_event_masks(k_tx, cfg.lambda_tx, cfg.window, n)
+    if cfg.channel is not None and cfg.channel.enabled:
+        gamma, success = channel_lib.transmission_delays(
+            k_chan, state.positions, tx_mask, cfg.channel
+        )
+        delay_w = jnp.ceil(gamma / cfg.window).astype(jnp.int32)  # >= 1 typ.
+        delay_w = jnp.clip(delay_w, 1, D - 1)
+        success = success & adj
+    else:
+        success = adj & tx_mask[:, None]
+        delay_w = jnp.ones((n, n), jnp.int32)
+
+    accept, accept_count = _psi_accept(k_psi, success, state.accept_count, cfg.psi)
+    w_eff = q * accept.astype(q.dtype)  # (sender, receiver)
+
+    # enqueue into the ring buffer, bucketed by relative delay
+    def enqueue(buf, pend):
+        for d in range(1, D):
+            w_d = w_eff * (delay_w == d).astype(q.dtype)
+            contrib = jnp.einsum("nm,n...->m...", w_d, pend.astype(jnp.float32))
+            buf = buf.at[jnp.mod(widx + d, D)].add(contrib.astype(buf.dtype))
+        return buf
+
+    buffer = jax.tree_util.tree_map(enqueue, buffer, pending)
+
+    # senders clear their pending backlog (Lemma A.1 backups are now sent)
+    keep = (~tx_mask).astype(jnp.float32)
+    pending = jax.tree_util.tree_map(
+        lambda pnd: pnd * keep.reshape((n,) + (1,) * (pnd.ndim - 1)), pending
+    )
+
+    # --- 4. periodic unification -------------------------------------------
+    def unify(args):
+        p, cnt = args
+        hub = jnp.mod((widx // jnp.maximum(cfg.unify_period, 1)), n)
+        p = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[hub][None], x.shape), p
+        )
+        return p, jnp.zeros_like(cnt)
+
+    if cfg.unify_period > 0:
+        do_unify = jnp.mod(widx + 1, cfg.unify_period) == 0
+        params, accept_count = jax.lax.cond(
+            do_unify, unify, lambda a: a, (params, accept_count)
+        )
+
+    return DracoState(
+        params=params,
+        pending=pending,
+        buffer=buffer,
+        accept_count=accept_count,
+        window_idx=widx + 1,
+        key=k_next,
+        positions=state.positions,
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "loss_fn", "num_windows"))
+def run_windows(state, cfg: DracoConfig, q, adj, loss_fn, data, num_windows: int):
+    def step(s, _):
+        return draco_window(s, cfg, q, adj, loss_fn, data), None
+
+    state, _ = jax.lax.scan(step, state, None, length=num_windows)
+    return state
+
+
+def build_graph(cfg: DracoConfig, key=None):
+    adj = adjacency(cfg.topology, cfg.num_clients, key=key)
+    q = row_stochastic(adj)
+    return q, adj
+
+
+def virtual_global_model(params):
+    """x_bar = E_i[x^(i)] (Sec. 2.1) — evaluation-only."""
+    return jax.tree_util.tree_map(lambda p: p.mean(axis=0), params)

@@ -1,0 +1,77 @@
+"""Gossip graph topologies and row-stochastic weight matrices.
+
+The paper (Sec. 2.2) normalizes transmission weights across *receivers*:
+``sum_{j != i} q^{ij} = 1`` for every sender i — i.e. Q is **row**-
+stochastic with zero diagonal, and no symmetry/doubly-stochastic
+assumption (directed graphs allowed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def adjacency(topology: str, n: int, key=None, p: float = 0.3, directed: bool = False):
+    """Boolean (n, n) adjacency, zero diagonal."""
+    if topology == "cycle":
+        a = np.zeros((n, n), bool)
+        for i in range(n):
+            a[i, (i + 1) % n] = True
+            if not directed:
+                a[i, (i - 1) % n] = True
+    elif topology == "ring2d":  # 2D torus (matches TPU ICI topology)
+        side = int(round(np.sqrt(n)))
+        assert side * side == n, "ring2d needs square n"
+        a = np.zeros((n, n), bool)
+        for i in range(n):
+            r, c = divmod(i, side)
+            for dr, dc in ((0, 1), (1, 0), (0, -1), (-1, 0)):
+                j = ((r + dr) % side) * side + (c + dc) % side
+                a[i, j] = True
+    elif topology == "complete":
+        a = ~np.eye(n, dtype=bool)
+    elif topology == "star":
+        a = np.zeros((n, n), bool)
+        a[0, 1:] = True
+        a[1:, 0] = True
+    elif topology == "erdos":
+        assert key is not None
+        rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+        a = rng.random((n, n)) < p
+        np.fill_diagonal(a, False)
+        if not directed:
+            a = a | a.T
+        # ensure weak connectivity via a cycle overlay
+        for i in range(n):
+            a[i, (i + 1) % n] = True
+    else:
+        raise ValueError(topology)
+    np.fill_diagonal(a, False)
+    return jnp.asarray(a)
+
+
+def row_stochastic(adj, weights=None) -> jax.Array:
+    """Row-stochastic Q from adjacency (uniform over out-neighbors)."""
+    a = adj.astype(jnp.float32)
+    if weights is not None:
+        a = a * weights
+    deg = a.sum(axis=1, keepdims=True)
+    return jnp.where(deg > 0, a / jnp.maximum(deg, 1e-9), 0.0)
+
+
+def metropolis(adj) -> jax.Array:
+    """Symmetric doubly-stochastic Metropolis-Hastings weights (for the
+    sync-symm / async-symm baselines, which assume undirected graphs)."""
+    a = adj | adj.T
+    deg = a.sum(axis=1)
+    w = jnp.where(a, 1.0 / (1.0 + jnp.maximum(deg[:, None], deg[None, :])), 0.0)
+    self_w = 1.0 - w.sum(axis=1)
+    return w + jnp.diag(self_w)
+
+
+def is_row_stochastic(q, atol=1e-5) -> bool:
+    rows = q.sum(axis=1)
+    nonzero = rows > atol
+    ok_rows = jnp.abs(jnp.where(nonzero, rows, 1.0) - 1.0) < atol
+    return bool(jnp.all(q >= -atol) & jnp.all(ok_rows) & jnp.all(jnp.diag(q) < atol))

@@ -1,0 +1,15 @@
+from repro.data.synthetic import (
+    classification_task,
+    dirichlet_partition,
+    federated_classification,
+    lm_token_batches,
+    make_mlp,
+)
+
+__all__ = [
+    "classification_task",
+    "dirichlet_partition",
+    "federated_classification",
+    "lm_token_batches",
+    "make_mlp",
+]

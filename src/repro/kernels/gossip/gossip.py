@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: row-stochastic gossip aggregation.
+
+Computes ``out = Q^T @ deltas`` for a small (N, N) mixing matrix Q and a
+huge (N, D) stacked-update matrix (D = flattened parameter count /
+tensor-parallel shard — hundreds of MB in production).
+
+TPU-native blocking rationale:
+  - D is tiled into ``block_d`` lanes (multiple of 128 to match the MXU
+    lane width); each grid step streams one (N, block_d) tile of deltas
+    HBM->VMEM, multiplies by the resident (N, N) Q tile on the MXU and
+    writes one (N, block_d) output tile. Every delta byte moves exactly
+    once — the kernel is purely memory-bound, matching its roofline role.
+  - N (the client-axis, 16..64) is zero-padded to the 8-sublane multiple
+    by the wrapper in ops.py; accumulation is f32 regardless of input
+    dtype (bf16 deltas are common).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gossip_kernel(q_ref, d_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)  # (N, N) resident
+    d = d_ref[...].astype(jnp.float32)  # (N, block_d)
+    o_ref[...] = jnp.dot(
+        q.T, d, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def gossip_mix_pallas(q, deltas, *, block_d: int = 512, interpret: bool = False):
+    """q (N, N) f32; deltas (N, D) with D % block_d == 0 (padded by ops)."""
+    n, d_total = deltas.shape
+    assert q.shape == (n, n)
+    assert d_total % block_d == 0, (d_total, block_d)
+    grid = (d_total // block_d,)
+    return pl.pallas_call(
+        _gossip_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),  # Q resident in VMEM
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, d_total), deltas.dtype),
+        interpret=interpret,
+    )(q, deltas)

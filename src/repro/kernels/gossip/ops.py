@@ -1,0 +1,34 @@
+"""jit'd public wrapper for the gossip mixing kernel (padding + fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gossip.gossip import gossip_mix_pallas
+from repro.kernels.gossip.ref import gossip_mix_ref
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gossip_mix(q, deltas, *, block_d: int = 512, interpret: bool = False):
+    """out = Q^T deltas with TPU-friendly padding. q (N,N), deltas (N,D)."""
+    n, d = deltas.shape
+    qp = _pad_to(_pad_to(q.astype(jnp.float32), 8, 0), 8, 1)
+    dp = _pad_to(_pad_to(deltas, 8, 0), block_d, 1)
+    out = gossip_mix_pallas(qp, dp, block_d=block_d, interpret=interpret)
+    return out[:n, :d]
+
+
+def gossip_mix_reference(q, deltas):
+    return gossip_mix_ref(q, deltas)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the gossip mixing kernel."""
+import jax.numpy as jnp
+
+
+def gossip_mix_ref(q, deltas):
+    """out[m, :] = sum_n q[n, m] * deltas[n, :].
+
+    q: (N, N) row-stochastic (sender, receiver), deltas: (N, D).
+    Accumulation in f32, output in deltas.dtype.
+    """
+    out = jnp.einsum(
+        "nm,nd->md", q.astype(jnp.float32), deltas.astype(jnp.float32)
+    )
+    return out.astype(deltas.dtype)

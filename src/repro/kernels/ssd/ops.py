@@ -1,0 +1,60 @@
+"""jit'd wrapper: full SSD forward built on the Pallas intra-chunk kernel.
+
+``ssd_forward_kernel(x, dt, A, B_, C_, D, chunk)`` mirrors
+``repro.models.ssm.ssd_chunked`` semantics; the intra-chunk hot loop runs
+in the Pallas kernel and the O(T/Q) inter-chunk state recurrence stays in
+JAX (associative scan).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ref import ssd_chunk_ref
+from repro.kernels.ssd.ssd import ssd_chunk_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "use_kernel"))
+def ssd_forward_kernel(x, dt, A, B_, C_, D, *, chunk: int,
+                       interpret: bool = False, use_kernel: bool = True):
+    """x (B,T,H,P); dt (B,T,H); A (H,); B_/C_ (B,T,G,N); D (H,)."""
+    Bb, T, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    Q = chunk
+    nc = T // Q
+    f32 = jnp.float32
+
+    # head-major (BH, nc, Q, .) layout
+    xh = jnp.moveaxis(x, 2, 1).reshape(Bb * H, nc, Q, P)
+    dth = jnp.moveaxis(dt, 2, 1).reshape(Bb * H, nc, Q).astype(f32)
+    Bh = jnp.repeat(B_, rep, axis=2)
+    Ch = jnp.repeat(C_, rep, axis=2)
+    Bh = jnp.moveaxis(Bh, 2, 1).reshape(Bb * H, nc, Q, N)
+    Ch = jnp.moveaxis(Ch, 2, 1).reshape(Bb * H, nc, Q, N)
+
+    la = dth * jnp.repeat(A[None, :], Bb, 0).reshape(Bb * H)[:, None, None]
+    cums = jnp.cumsum(la, axis=2)
+
+    if use_kernel:
+        Y_intra, S = ssd_chunk_pallas(Ch, Bh, xh, cums, dth, interpret=interpret)
+    else:
+        Y_intra, S = ssd_chunk_ref(Ch, Bh, xh, cums, dth)
+
+    chunk_decay = jnp.exp(cums[:, :, -1])  # (BH, nc)
+
+    def combine(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    _, states = jax.lax.associative_scan(combine, (chunk_decay, S), axis=1)
+    h_prev = jnp.concatenate([jnp.zeros_like(states[:, :1]), states[:, :-1]], axis=1)
+    Y_inter = jnp.einsum("zcq,zcqn,zcnp->zcqp", jnp.exp(cums), Ch, h_prev)
+
+    y = (Y_intra + Y_inter).reshape(Bb, H, T, P)
+    y = jnp.moveaxis(y, 1, 2)  # (B,T,H,P)
+    y = y + x.astype(f32) * D[None, None, :, None]
+    return y.astype(x.dtype)

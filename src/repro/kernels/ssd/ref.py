@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(C, B, x, cums, dt):
+    """Intra-chunk SSD, one (batch*head, chunk) slice at a time.
+
+    C, B: (BH, nc, Q, N); x: (BH, nc, Q, P); cums, dt: (BH, nc, Q) f32.
+    Returns:
+      Y (BH, nc, Q, P): intra-chunk output
+          Y[i] = sum_{j<=i} exp(cums_i - cums_j) (C_i . B_j) dt_j x_j
+      S (BH, nc, N, P): end-of-chunk state contribution
+          S = sum_j exp(cums_last - cums_j) dt_j B_j x_j^T
+    """
+    f32 = jnp.float32
+    C, B, x = C.astype(f32), B.astype(f32), x.astype(f32)
+    Q = C.shape[2]
+    CB = jnp.einsum("zcqn,zckn->zcqk", C, B)  # (BH, nc, Qi, Qj)
+    diff = cums[..., :, None] - cums[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None]
+    L = jnp.exp(jnp.where(mask, diff, -1e30))  # mask pre-exp (overflow-safe)
+    scores = CB * L * dt[..., None, :]
+    Y = jnp.einsum("zcqk,zckp->zcqp", scores, x)
+    decay_end = jnp.exp(cums[..., -1:] - cums) * dt  # (BH, nc, Q)
+    S = jnp.einsum("zcq,zcqn,zcqp->zcnp", decay_end, B, x)
+    return Y, S

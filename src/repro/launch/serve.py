@@ -1,0 +1,94 @@
+"""Batched serving loop: prefill + decode of the DRACO-unified model.
+
+A minimal production-shaped server: requests arrive as (prompt tokens,
+max_new); the loop batches them, runs prefill to build KV/SSM caches
+via repeated decode over prompt tokens (simple, cache-exact), then decodes
+greedily with one compiled ``serve_step``.
+
+Example (reduced config on CPU):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --batch 4 --prompt-len 32 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, get_reduced
+from repro.models import model as M
+
+
+def serve_batch(cfg, params, prompts, max_new: int, *, cross_embeds=None,
+                greedy: bool = True, key=None):
+    """prompts: (B, P) int32. Returns (B, max_new) generated tokens."""
+    B, P = prompts.shape
+    state = M.init_decode_state(cfg, B, P + max_new)
+    cross_kv = None
+    if cfg.family == "vlm":
+        assert cross_embeds is not None
+        cross_kv = M.init_cross_kv(params, cfg, cross_embeds)
+
+    decode = jax.jit(lambda p, t, s: M.decode_step(p, cfg, t, s, cross_kv))
+
+    def tok_input(tok):
+        # embeds-in archs (audio): feed the codebook-token embedding back
+        if cfg.embeds_in:
+            return params["embed"][tok][:, None, :].astype(jnp.dtype(cfg.dtype))
+        return tok
+
+    # prefill by stepping through the prompt (cache-exact, compile-once)
+    logits = None
+    for i in range(P):
+        logits, state = decode(params, tok_input(prompts[:, i]), state)
+
+    out = []
+    tok = jnp.argmax(logits, axis=-1)
+    for i in range(max_new):
+        out.append(tok)
+        logits, state = decode(params, tok_input(tok), state)
+        if greedy:
+            tok = jnp.argmax(logits, axis=-1)
+        else:
+            key, k = jax.random.split(key)
+            tok = jax.random.categorical(k, logits)
+    return jnp.stack(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_params(key, cfg)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    cross = None
+    if cfg.family == "vlm":
+        cross = jax.random.normal(
+            key, (args.batch, cfg.num_patch_tokens, cfg.d_model)
+        ).astype(jnp.dtype(cfg.dtype))
+
+    t0 = time.time()
+    toks = serve_batch(cfg, params, prompts, args.new_tokens, cross_embeds=cross)
+    toks.block_until_ready()
+    dt = time.time() - t0
+    total_new = args.batch * args.new_tokens
+    print(f"generated {toks.shape} tokens in {dt:.2f}s "
+          f"({total_new/dt:.1f} tok/s aggregate)")
+    print("sample:", np.asarray(toks[0])[:16])
+    assert np.isfinite(np.asarray(toks)).all()
+    return toks
+
+
+if __name__ == "__main__":
+    main()

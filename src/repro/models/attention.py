@@ -1,0 +1,267 @@
+"""GQA attention: full / blocked(online-softmax) / sliding-window / decode.
+
+Shapes convention: activations (B, S, d); heads materialized as
+(B, S, H, hd). KV caches:
+
+  - full cache:   k/v (B, S_max, Hkv, hd) + write position
+  - ring cache:   k/v (B, W, Hkv, hd), W = sliding window; slot = pos % W
+    (sub-quadratic, O(W) memory — used for dense archs at long_500k)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+from repro.sharding.axes import constrain
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    p = {
+        "wq": dense_init(kq, (d, nq * hd), d, dtype),
+        "wk": dense_init(kk, (d, nkv * hd), d, dtype),
+        "wv": dense_init(kv, (d, nkv * hd), d, dtype),
+        "wo": dense_init(ko, (nq * hd, d), nq * hd, dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((nq * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    return p
+
+
+def _split_heads(x, n_heads, hd):
+    return x.reshape(*x.shape[:-1], n_heads, hd)
+
+
+def _proj_qkv(params, x, kv_x, cfg):
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = kv_x @ params["wk"]
+    v = kv_x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    return (
+        _split_heads(q, cfg.num_heads, hd),
+        _split_heads(k, cfg.num_kv_heads, hd),
+        _split_heads(v, cfg.num_kv_heads, hd),
+    )
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=-2)
+
+
+def _sdpa(q, k, v, mask):
+    """q (B,S,Hq,hd), k/v (B,T,Hq,hd); mask broadcastable (B,1,S,T)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def _sdpa_grouped(q, k, v, mask, n_rep: int):
+    """GQA attention WITHOUT materializing the repeated K/V.
+
+    q (B,S,Hq,hd) with Hq = Hkv*n_rep; k/v (B,T,Hkv,hd) stay at kv-head
+    width (the 7x repeat of a 32k cache was a measured memory/collective
+    hot-spot at decode). mask broadcastable against (B,g,r,S,T)."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    qg = q.reshape(B, S, Hkv, n_rep, hd)
+    scores = jnp.einsum("bsgrd,btgd->bgrst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd)
+    scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrst,btgd->bsgrd", probs, v)
+    return out.reshape(B, S, Hq, hd)
+
+
+def full_attention(params, x, cfg, positions=None, kv_x=None, cross=False,
+                   sliding_window: int = 0):
+    """Causal (or cross) attention, scores fully materialized."""
+    B, S, _ = x.shape
+    kv_src = kv_x if kv_x is not None else x
+    q, k, v = _proj_qkv(params, x, kv_src, cfg)
+    if not cross:
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    T = k.shape[1]
+    if cross:
+        mask = jnp.ones((1, 1, S, T), bool)
+    else:
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(T)[None, :]
+        mask = j <= i
+        if sliding_window > 0:
+            mask = mask & (j > i - sliding_window)
+        mask = mask[None, None]
+    q = constrain(q, "batch", None, "heads", None)
+    out = _sdpa_grouped(q, k, v, mask, n_rep)
+    out = out.reshape(B, S, -1)
+    return out @ params["wo"]
+
+
+def blocked_attention(params, x, cfg, block_q: int = 512, block_kv: int = 1024,
+                      sliding_window: int = 0, remat_steps: bool = True):
+    """Causal self-attention with online softmax over KV blocks.
+
+    O(S * block) score memory, flash-style: scan over kv blocks per q
+    block. ``remat_steps`` wraps each kv step in jax.checkpoint so the
+    backward pass recomputes the per-block probabilities instead of
+    saving them (without it, scan residuals reconstitute the full S x S
+    score matrix and the memory win disappears — measured).
+    """
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = _proj_qkv(params, x, x, cfg)
+    positions = jnp.arange(S)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    H = cfg.num_heads
+
+    n_q = S // block_q
+    n_kv = S // block_kv
+    qb = q.reshape(B, n_q, block_q, H, hd)
+    kb = k.reshape(B, n_kv, block_kv, H, hd)
+    vb = v.reshape(B, n_kv, block_kv, H, hd)
+
+    def q_block(qi, q_i):
+        q_start = qi * block_q
+
+        def kv_step(carry, inputs):
+            acc, m, l = carry
+            kv_i, k_j, v_j = inputs
+            kv_start = kv_i * block_kv
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_j).astype(jnp.float32)
+            s = s / jnp.sqrt(hd)
+            iq = q_start + jnp.arange(block_q)[:, None]
+            jk = kv_start + jnp.arange(block_kv)[None, :]
+            msk = jk <= iq
+            if sliding_window > 0:
+                msk = msk & (jk > iq - sliding_window)
+            s = jnp.where(msk[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v_j.dtype), v_j
+            ).astype(jnp.float32)
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, H, block_q, hd), jnp.float32)
+        m0 = jnp.full((B, H, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+        kv_idx = jnp.arange(n_kv)
+        step = jax.checkpoint(kv_step) if remat_steps else kv_step
+        (acc, m, l), _ = jax.lax.scan(
+            step, (acc0, m0, l0), (kv_idx, jnp.swapaxes(kb, 0, 1), jnp.swapaxes(vb, 0, 1))
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.einsum("bhqd->bqhd", out).astype(x.dtype)
+
+    outs = jax.lax.map(lambda args: q_block(*args), (jnp.arange(n_q), jnp.swapaxes(qb, 0, 1)))
+    out = jnp.swapaxes(outs, 0, 1).reshape(B, S, H * hd)
+    return out @ params["wo"]
+
+
+def flash_self_attention(params, x, cfg, sliding_window: int = 0,
+                         block_q: int = 512, block_kv: int = 512):
+    """Causal self-attention via the custom-VJP FlashAttention-2 path
+    (O(S) residual memory — the trainable long-sequence path)."""
+    from repro.models.flash import flash_attention
+
+    B, S, _ = x.shape
+    q, k, v = _proj_qkv(params, x, x, cfg)
+    positions = jnp.arange(S)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    qT = jnp.swapaxes(q, 1, 2)  # (B,H,S,hd)
+    kT = jnp.swapaxes(k, 1, 2)
+    vT = jnp.swapaxes(v, 1, 2)
+    bq = min(block_q, S)
+    bk = min(block_kv, S)
+    out = flash_attention(qT, kT, vT, bq, bk, sliding_window)
+    out = jnp.swapaxes(out, 1, 2).reshape(B, S, -1)
+    return out @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, C, Hkv, hd)
+    v: jax.Array
+    # ring=True -> C == sliding window, slot = pos % C
+
+    @staticmethod
+    def init(batch, cache_len, n_kv, hd, dtype):
+        z = jnp.zeros((batch, cache_len, n_kv, hd), dtype)
+        return KVCache(z, z)
+
+
+def decode_attention(params, x, cache: KVCache, pos, cfg, ring: bool = False):
+    """One-token decode. x (B,1,d); pos scalar int (current position).
+
+    Returns (out (B,1,d), new_cache). With ``ring=True`` the cache is a
+    ring buffer of length W (sliding-window attention, O(W) per token).
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = _proj_qkv(params, x, x, cfg)
+    pos_arr = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, pos_arr, cfg.rope_theta)
+    k = apply_rope(k, pos_arr, cfg.rope_theta)
+
+    C = cache.k.shape[1]
+    slot = jnp.mod(pos, C) if ring else jnp.minimum(pos, C - 1)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), slot, axis=1)
+
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    kk = constrain(new_k, "batch", "cache_seq", "kv_heads", None)
+    vv = constrain(new_v, "batch", "cache_seq", "kv_heads", None)
+
+    idx = jnp.arange(C)
+    if ring:
+        valid = (idx <= slot) | (pos >= C)  # full ring once wrapped
+    else:
+        valid = idx <= pos
+    mask = valid[None, None, None, :]
+    out = _sdpa_grouped(q, kk, vv, mask, n_rep)
+    out = out.reshape(B, 1, -1) @ params["wo"]
+    return out, KVCache(new_k, new_v)
+
+
+def cross_decode_attention(params, x, k_cache, v_cache, cfg):
+    """Cross-attn at decode: static precomputed K/V over patch tokens."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q = _split_heads(x @ params["wq"], cfg.num_heads, hd)
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    kk, vv = _repeat_kv(k_cache, n_rep), _repeat_kv(v_cache, n_rep)
+    mask = jnp.ones((1, 1, 1, kk.shape[1]), bool)
+    out = _sdpa(q, kk, vv, mask)
+    return out.reshape(B, 1, -1) @ params["wo"]

@@ -1,0 +1,87 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch.
+
+TPU-native design notes (vs. the common GPU scatter/gather CUDA path):
+  - static shapes throughout: tokens are ranked within their expert queue
+    via an argsort (stable, O(T k log)), clipped to a per-expert capacity
+    C = ceil(cf * k * T / E) — dropped tokens pass through the residual.
+  - expert compute is one batched einsum over stacked expert weights
+    (E, d, f): with the expert axis sharded over the "model" mesh axis
+    this lowers to expert-parallel all-to-all style collectives.
+  - the (E, C, d) dispatch buffer is sharding-constrained on the expert
+    axis so each model shard only materializes its own experts' queues.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.sharding.axes import constrain
+
+
+def init_moe(key, cfg):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "router": dense_init(kr, (d, E), d, jnp.float32),
+        "experts_gate": dense_init(kg, (E, d, f), d, dtype),
+        "experts_up": dense_init(ku, (E, d, f), d, dtype),
+        "experts_down": dense_init(kd, (E, f, d), f, dtype),
+    }
+
+
+def _capacity(T: int, cfg) -> int:
+    c = int(cfg.capacity_factor * cfg.experts_per_token * T / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+
+
+def moe_block(params, x, cfg):
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32)) @ params["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss.
+    density = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / (T * k)
+    p_mean = probs.mean(0)
+    aux = E * jnp.sum(density * p_mean) * cfg.router_aux_weight
+
+    # ---- rank each (token, slot) within its expert queue ----------------
+    flat_e = eidx.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    rank_sorted = jnp.arange(T * k) - starts[sorted_e]
+    rank = jnp.zeros((T * k,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+
+    C = _capacity(T, cfg)
+    keep = rank < C
+    dst = jnp.where(keep, flat_e * C + rank, E * C)  # E*C = drop bin
+
+    # ---- dispatch: (E*C+1, d) buffer, expert axis sharded ---------------
+    src_tok = jnp.arange(T * k) // k
+    rows = xt[src_tok] * keep[:, None].astype(xt.dtype)
+    buf = jnp.zeros((E * C + 1, d), xt.dtype).at[dst].add(rows)
+    buf = buf[: E * C].reshape(E, C, d)
+    buf = constrain(buf, "experts", None, None)
+
+    # ---- expert FFN (batched over experts) -------------------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["experts_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["experts_up"])
+    out_e = jnp.einsum("ecf,efd->ecd", h, params["experts_down"])
+    out_e = constrain(out_e, "experts", None, None)
+
+    # ---- combine ---------------------------------------------------------
+    out_rows = out_e.reshape(E * C, d)
+    out_rows = jnp.concatenate([out_rows, jnp.zeros((1, d), out_rows.dtype)], 0)
+    gathered = out_rows[dst]  # (T*k, d); drop bin -> zeros row
+    gathered = gathered * (gate.reshape(-1, 1).astype(gathered.dtype))
+    out = gathered.reshape(T, k, d).sum(1)
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,224 @@
+"""Mamba2 / SSD block (state-space duality, arXiv:2405.21060).
+
+TPU adaptation: the SSD *chunked* form is used — intra-chunk work is an
+MXU-friendly (Q x Q) masked matmul per head (chunk Q = 128, lane-aligned),
+inter-chunk state is carried by an associative scan over chunks. The
+intra-chunk hot loop also exists as a Pallas kernel
+(``repro.kernels.ssd``) validated against ``ssd_reference`` here.
+
+Layer structure (Mamba2):
+  in_proj -> [z | xBC | dt]; causal depthwise conv over xBC; SSD;
+  gated RMSNorm(y * silu(z)); out_proj.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+from repro.sharding.axes import constrain
+
+
+def init_ssm(key, cfg):
+    d = cfg.d_model
+    di, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    H = cfg.ssm_heads
+    conv_ch = di + 2 * G * N
+    k1, k2, k3 = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.dtype)
+    d_in_proj = 2 * di + 2 * G * N + H
+    return {
+        "in_proj": dense_init(k1, (d, d_in_proj), d, dtype),
+        "conv_w": dense_init(k2, (conv_ch, cfg.ssm_conv_width), cfg.ssm_conv_width, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "ssm_d": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gnorm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(k3, (di, d), di, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,T,ch), w (ch,W)."""
+    W = w.shape[-1]
+    pads = [jnp.pad(x, ((0, 0), (W - 1 - i, i), (0, 0)))[:, : x.shape[1]] for i in range(W)]
+    # pads[i] is x shifted so that position t sees x[t - (W-1-i)]
+    out = sum(p * w[None, None, :, i] for i, p in enumerate(pads))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _split_proj(proj, cfg):
+    di, N, G, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    z, xBC, dt = jnp.split(proj, [di, 2 * di + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _split_xbc(xBC, cfg):
+    di, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    x, B_, C_ = jnp.split(xBC, [di, di + G * N], axis=-1)
+    return x, B_, C_
+
+
+def ssd_reference(x, dt, A, B_, C_, D, chunk: int = 0):
+    """Naive sequential SSD recurrence — the oracle.
+
+    x (B,T,H,P); dt (B,T,H); A (H,); B_/C_ (B,T,G,N); D (H,).
+    h_t = exp(dt A) h_{t-1} + dt B_t (x) ; y_t = C_t h_t + D x_t.
+    """
+    Bb, T, H, P = x.shape
+    G = B_.shape[2]
+    rep = H // G
+    Bh = jnp.repeat(B_, rep, axis=2)  # (B,T,H,N)
+    Ch = jnp.repeat(C_, rep, axis=2)
+    a = jnp.exp(dt * A[None, None, :])  # (B,T,H)
+
+    def step2(h, inp):
+        a_t, dt_t, B_t, C_t, x_t = inp  # (B,H) (B,H) (B,H,N) (B,H,N) (B,H,P)
+        h = h * a_t[..., None, None] + jnp.einsum("bhn,bhp->bhnp", B_t * dt_t[..., None], x_t)
+        y = jnp.einsum("bhn,bhnp->bhp", C_t, h)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, B_.shape[-1], P), jnp.float32)
+    xs = (
+        jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Bh, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(Ch, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step2, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B,T,H,P)
+    return (y + x.astype(jnp.float32) * D[None, None, :, None]).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, B_, C_, D, chunk: int):
+    """Chunked SSD (parallel form). Same signature/semantics as the oracle."""
+    Bb, T, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    Q = chunk
+    assert T % Q == 0, (T, Q)
+    nc = T // Q
+
+    f32 = jnp.float32
+    xc = x.reshape(Bb, nc, Q, H, P).astype(f32)
+    dtc = dt.reshape(Bb, nc, Q, H).astype(f32)
+    Bc = B_.reshape(Bb, nc, Q, G, N).astype(f32)
+    Cc = C_.reshape(Bb, nc, Q, G, N).astype(f32)
+
+    la = dtc * A[None, None, None, :]  # (B,nc,Q,H) log-decay
+    cums = jnp.cumsum(la, axis=2)  # inclusive
+
+    # --- intra-chunk: Y = (L o (C B^T) o dt_j) X --------------------------
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)  # (B,nc,G,Qi,Qj)
+    CB = jnp.repeat(CB, rep, axis=2)  # (B,nc,H,Qi,Qj)
+    # L[i,j] = exp(cums_i - cums_j) for i >= j else 0. Mask BEFORE exp:
+    # the masked-out upper triangle has positive exponents that overflow
+    # and poison gradients through jnp.where.
+    diff = cums[:, :, :, None, :] - cums[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -1e30))
+    scores = CB * jnp.moveaxis(L, -1, 2)  # (B,nc,H,Qi,Qj)
+    scores = scores * jnp.moveaxis(dtc, -1, 2)[:, :, :, None, :]  # dt_j on j axis
+    Y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores, xc)
+
+    # --- chunk states ------------------------------------------------------
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)  # (B,nc,Q,H)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (B,nc,Q,H,N)
+    S = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", decay_to_end * dtc, Bh, xc)
+    chunk_decay = jnp.exp(cums[:, :, -1, :])  # (B,nc,H)
+
+    # --- inter-chunk associative scan --------------------------------------
+    def combine(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    dec, states = jax.lax.associative_scan(combine, (chunk_decay, S), axis=1)
+    # state BEFORE chunk c:
+    h_prev = jnp.concatenate([jnp.zeros_like(states[:, :1]), states[:, :-1]], axis=1)
+
+    Ch = jnp.repeat(Cc, rep, axis=3)  # (B,nc,Q,H,N)
+    Y_inter = jnp.einsum(
+        "bcqh,bcqhn,bchnp->bcqhp", jnp.exp(cums), Ch, h_prev
+    )
+
+    y = (Y_intra + Y_inter).reshape(Bb, T, H, P)
+    y = y + x.astype(f32) * D[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+def ssm_block(params, x, cfg):
+    """Full Mamba2 block forward. x (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(proj, cfg)
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xs, B_, C_ = _split_xbc(xBC, cfg)
+    xs = xs.reshape(B, S, H, P)
+    xs = constrain(xs, "batch", "seq", "ssm_heads", None)
+    B_ = B_.reshape(B, S, cfg.ssm_groups, cfg.ssm_state)
+    C_ = C_.reshape(B, S, cfg.ssm_groups, cfg.ssm_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"])
+    chunk = min(cfg.ssm_chunk, S)
+    y = ssd_chunked(xs, dt, A, B_, C_, params["ssm_d"], chunk)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["gnorm"], cfg.norm_eps)
+    return y @ params["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent, O(1) per token)
+# ---------------------------------------------------------------------------
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array  # (B, W-1, conv_ch) last inputs
+    h: jax.Array  # (B, H, N, P) f32
+
+    @staticmethod
+    def init(batch, cfg, dtype):
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        return SSMState(
+            conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+            h=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        )
+
+
+def ssm_decode_step(params, x, state: SSMState, cfg):
+    """x (B,1,d) -> (out (B,1,d), new state)."""
+    B = x.shape[0]
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    proj = x @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(proj, cfg)
+    # conv over [state.conv, xBC]
+    hist = jnp.concatenate([state.conv, xBC], axis=1)  # (B, W, ch)
+    w = params["conv_w"]  # (ch, W)
+    conv_out = jnp.einsum("bwc,cw->bc", hist, w) + params["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :]  # (B,1,ch)
+    new_conv = hist[:, 1:, :]
+
+    xs, B_, C_ = _split_xbc(conv_out, cfg)
+    xs = xs.reshape(B, H, P)
+    B_ = B_.reshape(B, G, N)
+    C_ = C_.reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(B_, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    Ch = jnp.repeat(C_, rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["a_log"])
+    a = jnp.exp(dt * A[None, :])  # (B,H)
+
+    h = state.h * a[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bh * dt[..., None], xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h)
+    y = y + xs.astype(jnp.float32) * params["ssm_d"][None, :, None]
+    y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["gnorm"], cfg.norm_eps)
+    return y @ params["out_proj"], SSMState(new_conv, h)

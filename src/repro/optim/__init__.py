@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    cosine_schedule,
+    constant_schedule,
+    momentum,
+    sgd,
+    warmup_cosine,
+)
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "cosine_schedule",
+    "constant_schedule",
+    "momentum",
+    "sgd",
+    "warmup_cosine",
+]

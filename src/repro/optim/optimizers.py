@@ -1,0 +1,120 @@
+"""Minimal optimizer library (optax-free, pytree-based).
+
+DRACO's paper uses plain SGD (Algorithm 1); momentum/AdamW are provided
+for the production trainer and beyond-paper experiments. All states are
+pytrees with the same client-stacked leading axis as the params, so the
+gossip layer can mix them (or not) uniformly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable  # params -> opt_state
+    update: Callable  # (grads, opt_state, params, step) -> (updates, opt_state)
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine_schedule(lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        w = jnp.clip(step / max(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, lr * w, cos(step - warmup))
+
+    return fn
+
+
+def _tree_scale(t, s):
+    return jax.tree_util.tree_map(lambda x: (x.astype(jnp.float32) * s), t)
+
+
+def sgd(schedule) -> Optimizer:
+    schedule = schedule if callable(schedule) else constant_schedule(schedule)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        return _tree_scale(grads, -lr), state
+
+    return Optimizer(init, update)
+
+
+def momentum(schedule, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    schedule = schedule if callable(schedule) else constant_schedule(schedule)
+
+    def init(params):
+        return jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, m, params, step):
+        lr = schedule(step)
+        m = jax.tree_util.tree_map(lambda mm, g: beta * mm + g.astype(jnp.float32), m, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda mm, g: -(lr * (beta * mm + g.astype(jnp.float32))), m, grads
+            )
+        else:
+            upd = _tree_scale(m, -lr)
+        return upd, m
+
+    return Optimizer(init, update)
+
+
+def adamw(schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    schedule = schedule if callable(schedule) else constant_schedule(schedule)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+        }
+
+    def update(grads, state, params, step):
+        lr = schedule(step)
+        t = step + 1
+        m = jax.tree_util.tree_map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads,
+        )
+        bc1 = 1 - b1 ** t.astype(jnp.float32) if hasattr(t, "astype") else 1 - b1 ** t
+        bc2 = 1 - b2 ** t.astype(jnp.float32) if hasattr(t, "astype") else 1 - b2 ** t
+
+        def upd(mm, vv, p):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            u = -lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u
+
+        updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates
+    )

@@ -1,0 +1,16 @@
+from repro.sharding.axes import (
+    AxisRules,
+    constrain,
+    current_rules,
+    use_rules,
+)
+from repro.sharding.specs import param_spec, tree_param_specs
+
+__all__ = [
+    "AxisRules",
+    "constrain",
+    "current_rules",
+    "use_rules",
+    "param_spec",
+    "tree_param_specs",
+]

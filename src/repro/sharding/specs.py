@@ -1,0 +1,113 @@
+"""PartitionSpec rules for parameter pytrees.
+
+``param_spec(path, shape, mesh, prefix)`` maps a parameter's key-path +
+shape to a PartitionSpec. Core rule set (tensor-parallel over "model"):
+
+  - projections *into* the sharded dim (wq/wk/wv/w_gate/w_up, ssm
+    in_proj): last dim on "model"
+  - projections *out of* the sharded dim (wo/w_down/ssm out_proj):
+    first core dim on "model"
+  - expert-stacked weights: expert axis on "model"
+  - embeddings: vocab on "model"; norms/biases/scalars replicated
+
+Axes whose dim is not divisible by the mesh-axis size fall back to
+replicated (jax.jit in_shardings require exact divisibility). Leading
+stack axes (client axis, layer-group axis) are covered by ``prefix``
+(padded with None up to the leaf rank).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# (name fragment, core spec aligned to the LAST len(spec) dims)
+_RULES: Tuple[Tuple[str, tuple], ...] = (
+    ("embed", ("model", None)),
+    ("lm_head", (None, "model")),
+    ("wq", (None, "model")),
+    ("wk", (None, "model")),
+    ("wv", (None, "model")),
+    ("wo", ("model", None)),
+    ("w_gate", (None, "model")),
+    ("w_up", (None, "model")),
+    ("w_down", ("model", None)),
+    # MoE: stacked (E, d, f)/(E, f, d) -> shard expert axis.
+    ("experts_gate", ("model", None, None)),
+    ("experts_up", ("model", None, None)),
+    ("experts_down", ("model", None, None)),
+    ("router", (None, None)),
+    # SSD / Mamba2
+    ("in_proj", (None, "model")),
+    ("out_proj", ("model", None)),
+    ("conv_w", ("model", None)),
+    ("conv_b", ("model",)),
+    ("a_log", ("model",)),
+    ("ssm_d", ("model",)),
+    ("dt_bias", ("model",)),
+    ("gnorm", ("model",)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def filter_divisible(spec: P, shape, mesh) -> P:
+    """Replace spec entries whose mesh-axis size doesn't divide the dim."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        out.append(ax)
+    return P(*out)
+
+
+def param_spec(path, shape, mesh=None, prefix: tuple = ()) -> P:
+    """Spec for one param leaf. `prefix` covers leading stack axes."""
+    name = _path_str(path) if not isinstance(path, str) else path
+    ndim = len(shape)
+    core = None
+    for frag, spec in _RULES:
+        if frag in name:
+            core = spec
+            break
+    if core is None:
+        core = ()  # replicated (norm scales, biases, scalars)
+    core = tuple(core)
+    n_pad = ndim - len(prefix) - len(core)
+    if n_pad < 0:  # leaf rank smaller than rule: replicate the tail
+        spec = P(*prefix, *([None] * max(ndim - len(prefix), 0)))
+    else:
+        spec = P(*prefix, *([None] * n_pad), *core)
+    if mesh is not None:
+        spec = filter_divisible(spec, shape, mesh)
+    return spec
+
+
+def tree_param_specs(params, prefix: tuple = (), mesh=None):
+    """PartitionSpec pytree matching `params` (same treedef)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, tuple(leaf.shape), mesh, prefix),
+        params,
+    )

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Keep the default 1-CPU-device view for smoke tests; mesh/dry-run tests
+# spawn subprocesses that set XLA_FLAGS themselves (per project policy).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,95 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_reduced
+from repro.models.attention import (
+    KVCache,
+    blocked_attention,
+    decode_attention,
+    full_attention,
+    init_attention,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("stablelm-3b")
+    key = jax.random.PRNGKey(0)
+    params = init_attention(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, cfg.d_model))
+    return cfg, params, x
+
+
+def test_blocked_matches_full(setup):
+    cfg, params, x = setup
+    full = full_attention(params, x, cfg)
+    blocked = blocked_attention(params, x, cfg, block_q=16, block_kv=16)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(full),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_blocked_sliding_window_matches_full(setup):
+    cfg, params, x = setup
+    w = 24
+    full = full_attention(params, x, cfg, sliding_window=w)
+    blocked = blocked_attention(params, x, cfg, block_q=16, block_kv=16,
+                                sliding_window=w)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(full),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_decode_matches_full(setup):
+    cfg, params, x = setup
+    B, S, _ = x.shape
+    full = full_attention(params, x, cfg)
+    cache = KVCache.init(B, S, cfg.num_kv_heads, cfg.resolved_head_dim, x.dtype)
+    outs = []
+    for t in range(S):
+        o, cache = decode_attention(params, x[:, t : t + 1], cache, t, cfg)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_ring_cache_matches_windowed_full(setup):
+    cfg, params, x = setup
+    B, S, _ = x.shape
+    w = 16
+    full = full_attention(params, x, cfg, sliding_window=w)
+    cache = KVCache.init(B, w, cfg.num_kv_heads, cfg.resolved_head_dim, x.dtype)
+    outs = []
+    for t in range(S):
+        o, cache = decode_attention(params, x[:, t : t + 1], cache, t, cfg,
+                                    ring=True)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=3e-4, rtol=3e-3)
+
+
+def test_causality(setup):
+    """Perturbing future tokens must not change past outputs."""
+    cfg, params, x = setup
+    y1 = full_attention(params, x, cfg)
+    x2 = x.at[:, 40:].set(jax.random.normal(jax.random.PRNGKey(9), x[:, 40:].shape))
+    y2 = full_attention(params, x2, cfg)
+    np.testing.assert_allclose(np.asarray(y1[:, :40]), np.asarray(y2[:, :40]),
+                               atol=1e-5)
+
+
+def test_gqa_repeat_consistency():
+    """kv=1 GQA equals kv=nq MHA when kv weights are tiled."""
+    cfg1 = get_reduced("stablelm-3b").with_(num_heads=4, num_kv_heads=1)
+    key = jax.random.PRNGKey(3)
+    p1 = init_attention(key, cfg1)
+    cfgN = cfg1.with_(num_kv_heads=4)
+    pN = dict(p1)
+    pN["wk"] = jnp.tile(p1["wk"], (1, 4))
+    pN["wv"] = jnp.tile(p1["wv"], (1, 4))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 32, cfg1.d_model))
+    y1 = full_attention(p1, x, cfg1)
+    yN = full_attention(pN, x, cfgN)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(yN), atol=2e-5, rtol=2e-4)

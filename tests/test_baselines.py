@@ -1,0 +1,57 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import (
+    BASELINES,
+    eval_params,
+    init_baseline_state,
+    run_baseline,
+    sync_push_round,
+)
+from repro.core.protocol import DracoConfig
+from repro.data.synthetic import federated_classification, make_mlp
+
+N = 6
+
+
+@pytest.fixture(scope="module")
+def task():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    train, test = federated_classification(k1, N, input_dim=8, num_classes=4,
+                                           per_client=128)
+    params0, apply, loss, acc = make_mlp(k2, 8, (16,), 4)
+    return train, test, params0, loss, acc
+
+
+@pytest.mark.parametrize("method", BASELINES)
+def test_baseline_learns(method, task):
+    train, test, params0, loss, acc = task
+    cfg = DracoConfig(num_clients=N, lr=0.1, local_batches=1, batch_size=16,
+                      topology="complete", channel=None)
+    st = init_baseline_state(jax.random.PRNGKey(1), cfg, params0)
+    tx_, ty_ = test
+    acc0 = float(jax.vmap(lambda p: acc(p, tx_, ty_))(st.params).mean())
+    st = run_baseline(method, st, cfg, loss, train, 80)
+    p = eval_params(method, st)
+    acc1 = float(jax.vmap(lambda pp: acc(pp, tx_, ty_))(p).mean())
+    assert acc1 > acc0 + 0.15, (method, acc0, acc1)
+
+
+def test_push_sum_mass_conservation(task):
+    """Push-sum invariant: sum_i w_i == N and the weighted average of
+    (params * w) is preserved by the mixing (no local update)."""
+    train, _, params0, loss, _ = task
+    cfg = DracoConfig(num_clients=N, lr=0.0, local_batches=1, batch_size=16,
+                      topology="cycle", channel=None)
+    st = init_baseline_state(jax.random.PRNGKey(2), cfg, params0)
+    total0 = [np.asarray(l.sum(0)) for l in jax.tree_util.tree_leaves(st.params)]
+    st2, _ = sync_push_round(st, cfg,
+                             adj=jnp.asarray(~np.eye(N, dtype=bool)),
+                             loss_fn=loss, data=train)
+    np.testing.assert_allclose(float(st2.push_weight.sum()), N, rtol=1e-5)
+    total1 = [np.asarray(l.sum(0)) for l in jax.tree_util.tree_leaves(st2.params)]
+    for a, b in zip(total0, total1):
+        np.testing.assert_allclose(a, b, atol=1e-4)

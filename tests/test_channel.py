@@ -1,0 +1,60 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import (
+    ChannelConfig,
+    LIGHTSPEED,
+    pairwise_dist,
+    place_nodes,
+    transmission_delays,
+)
+
+
+def _setup(n=12, seed=0, **kw):
+    cfg = ChannelConfig(**kw)
+    key = jax.random.PRNGKey(seed)
+    pos = place_nodes(key, n, cfg)
+    return cfg, key, pos
+
+
+def test_placement_in_disk():
+    cfg, key, pos = _setup(n=100)
+    r = jnp.linalg.norm(pos, axis=-1)
+    assert float(r.max()) <= cfg.radius + 1e-3
+
+
+def test_delays_success_subset_of_tx():
+    cfg, key, pos = _setup(message_bytes=51_640, gamma_max=10.0)
+    tx = jnp.array([True] * 6 + [False] * 6)
+    gamma, succ = transmission_delays(jax.random.fold_in(key, 1), pos, tx, cfg)
+    # non-transmitting rows cannot succeed
+    assert not bool(succ[6:].any())
+    assert bool(succ[:6].any())  # some links work at these defaults
+
+
+def test_delay_at_least_propagation():
+    cfg, key, pos = _setup()
+    tx = jnp.ones((12,), bool)
+    gamma, _ = transmission_delays(jax.random.fold_in(key, 2), pos, tx, cfg)
+    dist = pairwise_dist(pos)
+    assert bool((gamma >= dist / LIGHTSPEED - 1e-9).all())
+
+
+def test_tight_deadline_kills_links():
+    cfg, key, pos = _setup(gamma_max=1e-9)
+    tx = jnp.ones((12,), bool)
+    _, succ = transmission_delays(jax.random.fold_in(key, 3), pos, tx, cfg)
+    assert not bool(succ.any())
+
+
+def test_bigger_message_slower():
+    key = jax.random.PRNGKey(5)
+    cfg_small = ChannelConfig(message_bytes=10_000)
+    cfg_big = ChannelConfig(message_bytes=10_000_000)
+    pos = place_nodes(key, 8, cfg_small)
+    tx = jnp.ones((8,), bool)
+    k = jax.random.fold_in(key, 1)
+    g_small, _ = transmission_delays(k, pos, tx, cfg_small)
+    g_big, _ = transmission_delays(k, pos, tx, cfg_big)
+    assert bool((g_big >= g_small).all())

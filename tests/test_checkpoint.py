@@ -1,0 +1,41 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore, save
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "groups": {"0:attn": {"wq": jax.random.normal(k1, (4, 8))}},
+        "embed": jax.random.normal(k2, (16, 4)).astype(jnp.bfloat16),
+        "scalars": (jnp.float32(3.5), jnp.int32(7)),
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree(jax.random.PRNGKey(0))
+    d = str(tmp_path / "ckpt")
+    save(d, 10, tree)
+    save(d, 20, tree)
+    assert latest_step(d) == 20
+    restored = restore(d, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_restore_specific_step(tmp_path):
+    d = str(tmp_path / "ckpt")
+    t1 = {"x": jnp.ones(3)}
+    t2 = {"x": 2 * jnp.ones(3)}
+    save(d, 1, t1)
+    save(d, 2, t2)
+    r1 = restore(d, t1, step=1)
+    np.testing.assert_array_equal(np.asarray(r1["x"]), np.ones(3))
+
+
+def test_latest_none(tmp_path):
+    assert latest_step(str(tmp_path / "nope")) is None

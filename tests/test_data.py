@@ -1,0 +1,69 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import (
+    classification_task,
+    dirichlet_partition,
+    federated_classification,
+    lm_token_batches,
+    make_mlp,
+)
+
+
+def test_classification_shapes():
+    x, y, anchors = classification_task(jax.random.PRNGKey(0), 100, 8, 5)
+    assert x.shape == (100, 8) and y.shape == (100,)
+    assert int(y.max()) < 5 and anchors.shape == (5, 8)
+
+
+def test_dirichlet_noniid():
+    key = jax.random.PRNGKey(1)
+    _, y, _ = classification_task(key, 5000, 4, 10)
+    idx = dirichlet_partition(jax.random.fold_in(key, 1), y, num_clients=8,
+                              num_classes=10, alpha=0.1, per_client=500)
+    assert idx.shape == (8, 500)
+    # low alpha -> clients have skewed class histograms
+    hists = []
+    for c in range(8):
+        yc = np.asarray(y[idx[c]])
+        h = np.bincount(yc, minlength=10) / 500
+        hists.append(h)
+    hists = np.stack(hists)
+    assert hists.max(axis=1).mean() > 0.3  # concentrated
+
+
+def test_federated_split_consistency():
+    train, test = federated_classification(jax.random.PRNGKey(2), 4, 8, 5,
+                                           per_client=64)
+    xs, ys = train
+    tx, ty = test
+    assert xs.shape == (4, 64, 8) and ys.shape == (4, 64)
+    # test drawn from the SAME anchors: a trained model generalizes (see
+    # make_mlp usage in protocol tests); here just check label support
+    assert int(ty.max()) < 5
+
+
+def test_lm_batches():
+    toks = lm_token_batches(jax.random.PRNGKey(3), 4, 8, 32, vocab=100)
+    assert toks.shape == (4, 8, 32)
+    assert int(toks.max()) < 100
+
+
+def test_mlp_learns_centralized():
+    key = jax.random.PRNGKey(4)
+    train, test = federated_classification(key, 2, 8, 4, per_client=256)
+    params, apply, loss, acc = make_mlp(jax.random.fold_in(key, 1), 8, (32,), 4)
+    xs, ys = train
+    x, y = xs.reshape(-1, 8), ys.reshape(-1)
+
+    @jax.jit
+    def step(p, k):
+        i = jax.random.randint(k, (32,), 0, x.shape[0])
+        return jax.tree_util.tree_map(
+            lambda a, g: a - 0.2 * g, p, jax.grad(loss)(p, x[i], y[i]))
+
+    for s in range(300):
+        params = step(params, jax.random.fold_in(key, s))
+    tx, ty = test
+    assert float(acc(params, tx, ty)) > 0.7

@@ -1,0 +1,54 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.events import (
+    event_list,
+    sample_event_masks,
+    window_event_probs,
+)
+
+
+def test_window_probs():
+    p = window_event_probs(0.1, 1.0)
+    np.testing.assert_allclose(float(p), 1 - np.exp(-0.1), rtol=1e-6)
+    assert float(window_event_probs(0.0, 1.0)) == 0.0
+    assert float(window_event_probs(100.0, 1.0)) > 0.999
+
+
+def test_event_mask_rate():
+    key = jax.random.PRNGKey(0)
+    lam, w, n, reps = 0.3, 1.0, 64, 200
+    hits = 0
+    for i in range(reps):
+        m = sample_event_masks(jax.random.fold_in(key, i), lam, w, n)
+        hits += int(m.sum())
+    emp = hits / (n * reps)
+    expected = 1 - np.exp(-lam * w)
+    assert abs(emp - expected) < 0.01
+
+
+def test_event_list_sorted_and_rates():
+    rng = np.random.default_rng(0)
+    evs = event_list(rng, n=10, horizon=500.0, lam_grad=0.1, lam_tx=0.2,
+                     unify_period=50.0)
+    ts = [e.t for e in evs]
+    assert ts == sorted(ts)
+    grads = [e for e in evs if e.kind == "grad"]
+    txs = [e for e in evs if e.kind == "tx"]
+    unifies = [e for e in evs if e.kind == "unify"]
+    # Poisson counts: 10 clients * 500s * rate, within 4 sigma
+    for got, lam in ((len(grads), 0.1), (len(txs), 0.2)):
+        mean = 10 * 500 * lam
+        assert abs(got - mean) < 4 * np.sqrt(mean)
+    assert len(unifies) == 9  # 50,100,...,450
+
+
+def test_event_list_per_client_independence():
+    rng = np.random.default_rng(1)
+    evs = event_list(rng, n=3, horizon=200.0, lam_grad=[0.5, 0.05, 0.0],
+                     lam_tx=0.0)
+    counts = {i: 0 for i in range(3)}
+    for e in evs:
+        counts[e.client] += 1
+    assert counts[0] > counts[1] > counts[2] == 0

@@ -1,0 +1,83 @@
+"""FlashAttention-2 custom-VJP path vs full attention: values AND grads."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_reduced
+from repro.models.attention import flash_self_attention, full_attention, init_attention
+from repro.models.flash import flash_attention
+
+
+def _qkv(key, B=2, H=4, S=64, hd=16):
+    ks = jax.random.split(key, 3)
+    return tuple(jax.random.normal(k, (B, H, S, hd)) for k in ks)
+
+
+def _ref(q, k, v, window=0):
+    hd = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(hd)
+    S, T = s.shape[-2], s.shape[-1]
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(T)[None, :]
+    m = j <= i
+    if window > 0:
+        m = m & (j > i - window)
+    s = jnp.where(m[None, None], s, -1e30)
+    return jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(s, -1), v)
+
+
+@pytest.mark.parametrize("window", [0, 24])
+@pytest.mark.parametrize("blocks", [(16, 16), (32, 16), (64, 64)])
+def test_flash_forward(window, blocks):
+    q, k, v = _qkv(jax.random.PRNGKey(0))
+    bq, bk = blocks
+    out = flash_attention(q, k, v, bq, bk, window)
+    ref = _ref(q, k, v, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4, rtol=2e-3)
+
+
+@pytest.mark.parametrize("window", [0, 24])
+def test_flash_grads(window):
+    q, k, v = _qkv(jax.random.PRNGKey(1))
+
+    def f_flash(q, k, v):
+        return (flash_attention(q, k, v, 16, 16, window) ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (_ref(q, k, v, window) ** 2).sum()
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(g1, g2, "qkv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=3e-4, rtol=3e-3, err_msg=name)
+
+
+def test_flash_layer_matches_full_layer():
+    cfg = get_reduced("yi-34b")  # GQA kv=2
+    key = jax.random.PRNGKey(2)
+    params = init_attention(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, cfg.d_model))
+    full = full_attention(params, x, cfg)
+    flash = flash_self_attention(params, x, cfg, block_q=16, block_kv=16)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(full),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_flash_layer_grad_matches():
+    cfg = get_reduced("stablelm-3b")
+    key = jax.random.PRNGKey(3)
+    params = init_attention(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 32, cfg.d_model))
+
+    def loss_of(fn):
+        return lambda p: (fn(p, x, cfg) ** 2).mean()
+
+    g_full = jax.grad(loss_of(lambda p, x, c: full_attention(p, x, c)))(params)
+    g_flash = jax.grad(
+        loss_of(lambda p, x, c: flash_self_attention(p, x, c, block_q=16, block_kv=16))
+    )(params)
+    for (ka, a), (kb, b) in zip(sorted(g_full.items()), sorted(g_flash.items())):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=3e-4, rtol=3e-3, err_msg=ka)

@@ -1,0 +1,52 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw, cosine_schedule, momentum, sgd, warmup_cosine
+from repro.optim.optimizers import apply_updates
+
+
+def _quadratic():
+    target = jnp.array([1.0, -2.0, 3.0])
+
+    def loss(p):
+        return jnp.sum((p["x"] - target) ** 2)
+
+    return {"x": jnp.zeros(3)}, loss, target
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(0.1),
+    lambda: momentum(0.05, beta=0.9),
+    lambda: momentum(0.05, beta=0.9, nesterov=True),
+    lambda: adamw(0.1),
+])
+def test_converges_on_quadratic(make_opt):
+    params, loss, target = _quadratic()
+    opt = make_opt()
+    state = opt.init(params)
+    for step in range(400):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params, jnp.asarray(step))
+        params = apply_updates(params, upd)
+    np.testing.assert_allclose(np.asarray(params["x"]), np.asarray(target), atol=1e-2)
+
+
+def test_schedules():
+    cos = cosine_schedule(1.0, 100, final_frac=0.1)
+    assert float(cos(0)) == pytest.approx(1.0)
+    assert float(cos(100)) == pytest.approx(0.1, abs=1e-6)
+    wc = warmup_cosine(1.0, warmup=10, total_steps=110)
+    assert float(wc(0)) == pytest.approx(0.0)
+    assert float(wc(10)) == pytest.approx(1.0)
+    assert float(wc(5)) == pytest.approx(0.5)
+
+
+def test_adamw_weight_decay():
+    opt = adamw(0.1, weight_decay=0.1)
+    params = {"x": jnp.ones(2)}
+    state = opt.init(params)
+    g = {"x": jnp.zeros(2)}
+    upd, state = opt.update(g, state, params, jnp.asarray(0))
+    assert float(upd["x"][0]) < 0  # decay pulls toward zero

@@ -1,0 +1,86 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mixing import mix_dense, psi_cap_mask
+from repro.core.topology import adjacency, is_row_stochastic, metropolis, row_stochastic
+
+TOPOS = st.sampled_from(["cycle", "complete", "star", "erdos"])
+
+
+@settings(max_examples=30, deadline=None)
+@given(topo=TOPOS, n=st.integers(3, 40), seed=st.integers(0, 1000))
+def test_row_stochastic_always(topo, n, seed):
+    adj = adjacency(topo, n, key=jax.random.PRNGKey(seed))
+    q = row_stochastic(adj)
+    assert is_row_stochastic(q)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(3, 30), psi=st.integers(1, 6), seed=st.integers(0, 1000))
+def test_psi_cap_budget_always(n, psi, seed):
+    q = row_stochastic(adjacency("complete", n))
+    capped = psi_cap_mask(jax.random.PRNGKey(seed), q, psi)
+    incoming = np.asarray((capped > 0).sum(0))
+    assert (incoming <= psi).all()
+    # capping never increases any weight
+    assert (np.asarray(capped) <= np.asarray(q) + 1e-9).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 16), d=st.integers(1, 64), seed=st.integers(0, 1000))
+def test_mixing_mass_conservation(n, d, seed):
+    """Row-stochastic mixing redistributes but never creates mass:
+    sum_j out_j == sum_i (rowsum_i) delta_i == sum_i delta_i."""
+    key = jax.random.PRNGKey(seed)
+    q = row_stochastic(adjacency("complete", n))
+    deltas = {"w": jax.random.normal(jax.random.fold_in(key, 1), (n, d))}
+    out = mix_dense(q, deltas)
+    np.testing.assert_allclose(np.asarray(out["w"].sum(0)),
+                               np.asarray(deltas["w"].sum(0)), atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(3, 20), seed=st.integers(0, 1000))
+def test_metropolis_spectral(n, seed):
+    """Metropolis matrix: doubly stochastic, symmetric, eigenvalues in
+    [-1, 1] with lambda_1 = 1 (consensus-preserving)."""
+    adj = adjacency("erdos", n, key=jax.random.PRNGKey(seed))
+    w = np.asarray(metropolis(adj))
+    ev = np.linalg.eigvalsh(w)
+    assert ev.max() <= 1.0 + 1e-5
+    assert ev.min() >= -1.0 - 1e-5
+    np.testing.assert_allclose(ev.max(), 1.0, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 12), d=st.integers(1, 32), seed=st.integers(0, 500))
+def test_mix_permutation_equivariance(n, d, seed):
+    """Relabeling clients commutes with mixing: P^T Q^T D = (QP)^T ..."""
+    key = jax.random.PRNGKey(seed)
+    q = row_stochastic(adjacency("complete", n))
+    deltas = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    perm = jax.random.permutation(jax.random.fold_in(key, 2), n)
+    out = mix_dense(q, {"w": deltas})["w"]
+    q_p = q[perm][:, perm]
+    out_p = mix_dense(q_p, {"w": deltas[perm]})["w"]
+    np.testing.assert_allclose(np.asarray(out[perm]), np.asarray(out_p),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), b=st.integers(1, 3), s=st.sampled_from([8, 16]))
+def test_model_logits_finite_random_inputs(seed, b, s):
+    """Unified decoder never produces NaN on random tokens (reduced dense)."""
+    from repro.configs.base import get_reduced
+    from repro.models.registry import build_model
+
+    cfg = get_reduced("qwen2-1.5b")
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = m.init(key)
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0, cfg.vocab_size)
+    logits, _ = m.apply(params, {"tokens": toks})
+    assert bool(jnp.isfinite(logits).all())

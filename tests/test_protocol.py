@@ -1,0 +1,150 @@
+"""DRACO protocol behaviour tests (the paper's Algorithm 1/2 invariants)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.channel import ChannelConfig
+from repro.core.protocol import (
+    DracoConfig,
+    build_graph,
+    draco_window,
+    init_state,
+    run_windows,
+    virtual_global_model,
+)
+from repro.data.synthetic import federated_classification, make_mlp
+
+N = 6
+
+
+@pytest.fixture(scope="module")
+def task():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    train, test = federated_classification(k1, N, input_dim=8, num_classes=4,
+                                           per_client=128)
+    params0, apply, loss, acc = make_mlp(k2, 8, (16,), 4)
+    return train, test, params0, loss, acc
+
+
+def _cfg(**kw):
+    base = dict(num_clients=N, lr=0.1, local_batches=1, batch_size=16,
+                lambda_grad=0.8, lambda_tx=0.8, unify_period=0, psi=0,
+                topology="complete", max_delay_windows=3, channel=None)
+    base.update(kw)
+    return DracoConfig(**base)
+
+
+def test_draco_learns(task):
+    train, test, params0, loss, acc = task
+    cfg = _cfg(unify_period=25)
+    q, adj = build_graph(cfg)
+    st = init_state(jax.random.PRNGKey(1), cfg, params0)
+    tx_, ty_ = test
+    acc0 = float(jax.vmap(lambda p: acc(p, tx_, ty_))(st.params).mean())
+    st = run_windows(st, cfg, q, adj, loss, train, 250)
+    acc1 = float(jax.vmap(lambda p: acc(p, tx_, ty_))(st.params).mean())
+    assert acc1 > acc0 + 0.15, (acc0, acc1)
+    for leaf in jax.tree_util.tree_leaves(st.params):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+def test_unification_equalizes(task):
+    train, _, params0, loss, _ = task
+    cfg = _cfg(unify_period=10)
+    q, adj = build_graph(cfg)
+    st = init_state(jax.random.PRNGKey(2), cfg, params0)
+    st = run_windows(st, cfg, q, adj, loss, train, 10)  # exactly one unification
+    for leaf in jax.tree_util.tree_leaves(st.params):
+        spread = jnp.abs(leaf - leaf[0:1]).max()
+        assert float(spread) == 0.0
+    assert int(st.accept_count.max()) == 0  # reset at unification
+
+
+def test_no_tx_no_param_change(task):
+    train, _, params0, loss, _ = task
+    cfg = _cfg(lambda_tx=0.0, unify_period=0)
+    q, adj = build_graph(cfg)
+    st = init_state(jax.random.PRNGKey(3), cfg, params0)
+    st2 = run_windows(st, cfg, q, adj, loss, train, 20)
+    # nothing transmitted -> reference models never renewed (paper: senders
+    # do not apply their own updates)
+    for a, b in zip(jax.tree_util.tree_leaves(st.params),
+                    jax.tree_util.tree_leaves(st2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # but pending backlogs accumulated
+    pend = sum(float(jnp.abs(l).sum()) for l in jax.tree_util.tree_leaves(st2.pending))
+    assert pend > 0
+
+
+def test_psi_cap_respected(task):
+    train, _, params0, loss, _ = task
+    psi = 2
+    cfg = _cfg(psi=psi, unify_period=50, lambda_tx=5.0, lambda_grad=5.0)
+    q, adj = build_graph(cfg)
+    st = init_state(jax.random.PRNGKey(4), cfg, params0)
+    for _ in range(49):  # stay within one unification period
+        st = draco_window(st, cfg, q, adj, loss, train)
+    assert int(st.accept_count.max()) <= psi
+
+
+def test_self_update_off_by_default(task):
+    """Algorithm 1: local training only produces Delta; x^(i) changes only
+    via reception. With delays >= 1 window, params after one window with
+    guaranteed grad events but no arrivals are unchanged."""
+    train, _, params0, loss, _ = task
+    cfg = _cfg(lambda_grad=100.0, lambda_tx=0.0)
+    q, adj = build_graph(cfg)
+    st = init_state(jax.random.PRNGKey(5), cfg, params0)
+    st2 = draco_window(st, cfg, q, adj, loss, train)
+    for a, b in zip(jax.tree_util.tree_leaves(st.params),
+                    jax.tree_util.tree_leaves(st2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_delayed_delivery(task):
+    """A transmission enqueued in window k arrives in a later window."""
+    train, _, params0, loss, _ = task
+    cfg = _cfg(lambda_grad=100.0, lambda_tx=100.0, max_delay_windows=4)
+    q, adj = build_graph(cfg)
+    st = init_state(jax.random.PRNGKey(6), cfg, params0)
+    st1 = draco_window(st, cfg, q, adj, loss, train)
+    # params unchanged after window 1 (messages in flight)...
+    changed1 = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree_util.tree_leaves(st.params),
+                        jax.tree_util.tree_leaves(st1.params)))
+    assert not changed1
+    st2 = draco_window(st1, cfg, q, adj, loss, train)
+    changed2 = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree_util.tree_leaves(st1.params),
+                        jax.tree_util.tree_leaves(st2.params)))
+    assert changed2  # ...and land in window 2 (delay = 1 window default)
+
+
+def test_wireless_channel_path(task):
+    train, test, params0, loss, acc = task
+    cfg = _cfg(unify_period=25,
+               channel=ChannelConfig(message_bytes=51_640, gamma_max=10.0))
+    q, adj = build_graph(cfg)
+    st = init_state(jax.random.PRNGKey(7), cfg, params0)
+    st = run_windows(st, cfg, q, adj, loss, train, 150)
+    tx_, ty_ = test
+    a = float(jax.vmap(lambda p: acc(p, tx_, ty_))(st.params).mean())
+    assert a > 0.3
+    for leaf in jax.tree_util.tree_leaves(st.params):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+def test_virtual_global_model(task):
+    _, _, params0, _, _ = task
+    cfg = _cfg()
+    st = init_state(jax.random.PRNGKey(8), cfg, params0)
+    vg = virtual_global_model(st.params)
+    for l0, lv in zip(jax.tree_util.tree_leaves(params0),
+                      jax.tree_util.tree_leaves(vg)):
+        np.testing.assert_allclose(np.asarray(l0), np.asarray(lv), atol=1e-6)

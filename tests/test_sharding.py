@@ -1,0 +1,47 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.axes import AxisRules, constrain, use_rules
+from repro.sharding.specs import filter_divisible, param_spec, tree_param_specs
+
+
+class FakeMesh:
+    shape = {"data": 4, "model": 8, "pod": 2}
+
+
+def test_param_spec_rules():
+    assert param_spec("groups/0:attn/attn/wq", (3, 128, 256)) == P(None, None, "model")
+    assert param_spec("groups/0:attn/attn/wo", (3, 256, 128)) == P(None, "model", None)
+    assert param_spec("embed", (1024, 64)) == P("model", None)
+    assert param_spec("groups/0:moe/moe/experts_gate", (2, 8, 16, 32)) == P(
+        None, "model", None, None)
+    assert param_spec("final_norm", (64,)) == P(None)
+
+
+def test_param_spec_prefix():
+    s = param_spec("groups/0:mlp/mlp/w_up", (16, 3, 64, 128), prefix=("data",))
+    assert s == P("data", None, None, "model")
+
+
+def test_filter_divisible():
+    m = FakeMesh()
+    assert filter_divisible(P("model", None), (64, 3), m) == P("model", None)
+    assert filter_divisible(P("model", None), (63, 3), m) == P(None, None)
+    assert filter_divisible(P(("pod", "data"), "model"), (8, 16), m) == P(
+        ("pod", "data"), "model")
+    assert filter_divisible(P(("pod", "data"), None), (7, 16), m) == P(None, None)
+
+
+def test_tree_param_specs_structure():
+    tree = {"embed": jnp.zeros((16, 8)), "g": {"wq": jnp.zeros((2, 8, 16))}}
+    specs = tree_param_specs(tree)
+    assert specs["embed"] == P("model", None)
+    assert specs["g"]["wq"] == P(None, None, "model")
+
+
+def test_constrain_noop_without_rules():
+    x = jnp.zeros((4, 8))
+    y = constrain(x, "batch", "ff")
+    assert y is x

