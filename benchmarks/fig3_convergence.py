@@ -4,6 +4,12 @@
 topology. Writes a CSV of accuracy-vs-events curves to results/ and
 prints the final table.
 
+Runs through the unified `repro.api` interface: every method is a
+registered `Algorithm`, compute-matched step counts come from
+`steps_for_budget`, and each curve is produced by ONE compiled
+`simulate(...)` call with in-jit eval (`eval_every`) instead of the old
+per-segment host loop.
+
   PYTHONPATH=src python -m benchmarks.fig3_convergence --task emnist
 """
 from __future__ import annotations
@@ -13,17 +19,17 @@ import json
 import os
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
+from repro.api import get_algorithm, make_context, simulate, steps_for_budget
 from repro.configs.draco_paper import TASKS
-from repro.core.baselines import BASELINES, eval_params, init_baseline_state, run_baseline
+from repro.core.baselines import BASELINES
 from repro.core.channel import ChannelConfig
-from repro.core.protocol import DracoConfig, build_graph, init_state, run_windows
-from repro.data.synthetic import federated_classification, make_mlp
+from repro.core.protocol import DracoConfig
 
 
 def setup(task_name: str, seed: int = 0, num_clients: int = None):
+    from repro.data.synthetic import federated_classification, make_mlp
+
     t = TASKS[task_name]
     n = num_clients or t.num_clients
     key = jax.random.PRNGKey(seed)
@@ -47,37 +53,32 @@ def setup(task_name: str, seed: int = 0, num_clients: int = None):
 def run(task_name="emnist", segments=8, seg_windows=100, seg_rounds=None,
         seed=0, num_clients=None, out_dir="results"):
     """Compute-matched comparison: every method gets the same expected
-    number of local gradient computations per client per segment.
-    DRACO does p_grad = 1-exp(-lambda*w) grads/client/window; sync
-    baselines do 1 grad/client/round; async baselines ~p_active=0.5."""
+    number of local gradient computations per client per segment
+    (`steps_for_budget`). Each method runs as a single fused
+    `simulate(...)` scan sampling accuracy every segment in-jit."""
     cfg, train, test, params0, loss, acc, key = setup(task_name, seed, num_clients)
-    tx_, ty_ = test
     mean_acc = lambda params: float(
-        jax.vmap(lambda p: acc(p, tx_, ty_))(params).mean())
+        jax.vmap(lambda p: acc(p, test[0], test[1]))(params).mean())
 
-    p_grad = 1.0 - np.exp(-cfg.lambda_grad * cfg.window)
-    rounds_sync = seg_rounds or max(1, int(round(seg_windows * p_grad)))
-    rounds_async = seg_rounds or max(1, int(round(seg_windows * p_grad / 0.5)))
+    # per-segment compute budget = DRACO's expected grads over one segment
+    budget = seg_windows * get_algorithm("draco").grads_per_step(cfg)
 
+    # one shared context: graph + weight matrices built once for all methods
+    ctx = make_context(cfg, loss, train)
     curves = {}
-    # --- DRACO ------------------------------------------------------------
-    q, adj = build_graph(cfg)
-    st = init_state(key, cfg, params0)
-    curve = [mean_acc(st.params)]
-    for _ in range(segments):
-        st = run_windows(st, cfg, q, adj, loss, train, seg_windows)
-        curve.append(mean_acc(st.params))
-    curves["draco"] = curve
-
-    # --- baselines ----------------------------------------------------------
-    for m in BASELINES:
-        r = rounds_sync if m.startswith("sync") else rounds_async
-        bst = init_baseline_state(key, cfg, params0)
-        curve = [mean_acc(bst.params)]
-        for _ in range(segments):
-            bst = run_baseline(m, bst, cfg, loss, train, r)
-            curve.append(mean_acc(eval_params(m, bst)))
-        curves[m] = curve
+    for name in ("draco",) + tuple(BASELINES):
+        algo = get_algorithm(name)
+        if name == "draco":
+            per_seg = seg_windows
+        else:
+            per_seg = seg_rounds or steps_for_budget(name, cfg, budget)
+        st = algo.init(key, cfg, params0)
+        acc0 = mean_acc(algo.eval_params(st))
+        st, trace = simulate(algo, cfg, params0, loss, train,
+                             num_steps=segments * per_seg, key=key,
+                             eval_every=per_seg, eval_fn=acc,
+                             eval_data=test, ctx=ctx, state=st)
+        curves[name] = [acc0] + [float(a) for a in trace.metrics["accuracy"]]
 
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"fig3_{task_name}.json")

@@ -5,6 +5,9 @@ Expected trends (paper Sec. 5): tiny Psi starves aggregation and slows
 learning; very large Psi wastes communication with no accuracy gain and
 can oscillate.
 
+Each Psi point is ONE fused `repro.api.simulate` call with in-jit
+accuracy sampling (`eval_every`) — no per-segment host round-trips.
+
   PYTHONPATH=src python -m benchmarks.fig4_psi_sweep --task emnist
 """
 from __future__ import annotations
@@ -13,33 +16,31 @@ import argparse
 import json
 import os
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks.fig3_convergence import setup
-from repro.core.protocol import build_graph, init_state, run_windows
+from repro.api import make_context, simulate
 
 
 def run(task_name="emnist", psis=(1, 2, 4, 8, 24), windows=600, seed=0,
-        num_clients=None, out_dir="results"):
+        num_clients=None, out_dir="results", segments=6):
     cfg0, train, test, params0, loss, acc, key = setup(task_name, seed, num_clients)
-    tx_, ty_ = test
+    seg_w = max(1, windows // segments)
+    # graph/weights built once; per-psi runs rebind only the static config
+    ctx0 = make_context(cfg0, loss, train)
     results = {}
     for psi in psis:
         cfg = cfg0.replace(psi=int(psi))
-        q, adj = build_graph(cfg)
-        st = init_state(key, cfg, params0)
-        accs = []
-        msgs = 0
-        for seg in range(6):
-            prev_cnt = int(st.accept_count.sum())
-            st = run_windows(st, cfg, q, adj, loss, train, windows // 6)
-            accs.append(float(jax.vmap(lambda p: acc(p, tx_, ty_))(st.params).mean()))
-            msgs += int(st.accept_count.sum())
+        st, trace = simulate("draco", cfg, params0, loss, train,
+                             num_steps=segments * seg_w, key=key,
+                             eval_every=seg_w, eval_fn=acc, eval_data=test,
+                             ctx=ctx0.replace(cfg=cfg))
+        accs = [float(a) for a in trace.metrics["accuracy"]]
         results[int(psi)] = {
             "final_acc": accs[-1],
             "best_acc": max(accs),
             "acc_curve": accs,
+            "msgs": int(st.total_accept.sum()),
             "osc": float(jnp.std(jnp.diff(jnp.asarray(accs[2:])))) if len(accs) > 3 else 0.0,
         }
     os.makedirs(out_dir, exist_ok=True)

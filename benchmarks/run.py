@@ -1,5 +1,9 @@
 """Benchmark harness — one function per paper table/figure.
 
+Protocol-level benches run through the unified ``repro.api`` interface
+(``simulate`` + the algorithm registry); ``bench_simulate_fused`` tracks
+the in-jit-eval speedup of the fused driver vs the legacy segment loop.
+
 Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run            # full set
@@ -70,6 +74,41 @@ def bench_draco_window(quick=False):
     emit(f"draco_window_N{n}", us, f"{cfg.topology}")
 
 
+def bench_simulate_fused(quick=False):
+    """API-layer: fused `repro.api.simulate` (one scan, in-jit eval via
+    lax.cond) vs the legacy segment loop (host round-trip eval between
+    `run_windows` calls). Same protocol, same eval cadence."""
+    from benchmarks.fig3_convergence import setup
+    from repro.api import simulate
+    from repro.core.protocol import build_graph, init_state, run_windows
+
+    n = 8 if quick else 16
+    windows = 60 if quick else 200
+    every = 10 if quick else 25
+    cfg, train, test, params0, loss, acc, key = setup("emnist", num_clients=n)
+
+    def fused():
+        st, trace = simulate("draco", cfg, params0, loss, train,
+                             num_steps=windows, key=key, eval_every=every,
+                             eval_fn=acc, eval_data=test)
+        return st.params
+
+    q, adj = build_graph(cfg)
+
+    def segment_loop():
+        st = init_state(key, cfg, params0)
+        for _ in range(windows // every):
+            st = run_windows(st, cfg, q, adj, loss, train, every)
+            float(jax.vmap(lambda p: acc(p, test[0], test[1]))(st.params).mean())
+        return st.params
+
+    us_f = time_fn(fused, warmup=1, iters=3)
+    us_l = time_fn(segment_loop, warmup=1, iters=3)
+    emit(f"simulate_fused_W{windows}_N{n}", us_f,
+         f"speedup_vs_segment_loop={us_l/us_f:.2f}x")
+    emit(f"segment_loop_W{windows}_N{n}", us_l, "legacy-path")
+
+
 def bench_fig3(quick=False):
     """Fig. 3 (both panels): DRACO vs baselines final accuracy."""
     from benchmarks.fig3_convergence import run
@@ -117,6 +156,7 @@ BENCHES = {
     "gossip": bench_gossip_mix,
     "ssd": bench_ssd,
     "draco_window": bench_draco_window,
+    "simulate_fused": bench_simulate_fused,
     "fig3": bench_fig3,
     "fig4": bench_fig4,
     "decode": bench_decode,

@@ -1,22 +1,19 @@
-"""Quickstart: DRACO at the paper's experiment scale.
+"""Quickstart: DRACO at the paper's experiment scale, via `repro.api`.
 
 25 clients, EMNIST-like federated classification, cycle topology,
 unreliable wireless channel, Psi message cap — the whole Algorithm 1
-pipeline in ~a minute on CPU.
+pipeline in ~a minute on CPU, through the unified algorithm registry:
+one `simulate(...)` call runs the full 600-window protocol inside a
+single compiled scan, sampling accuracy + consensus distance in-jit.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
+from repro.api import get_algorithm, list_algorithms, simulate
 from repro.configs.draco_paper import EMNIST
 from repro.core.channel import ChannelConfig
-from repro.core.protocol import (
-    DracoConfig,
-    build_graph,
-    init_state,
-    run_windows,
-    virtual_global_model,
-)
+from repro.core.protocol import DracoConfig, virtual_global_model
 from repro.data.synthetic import federated_classification, make_mlp
 
 
@@ -27,6 +24,7 @@ def main():
     k_data, k_model, k_sim = jax.random.split(key, 3)
 
     print(f"== DRACO quickstart: {n} clients, {t.name}-like task, cycle topology ==")
+    print(f"registered algorithms: {', '.join(list_algorithms())}")
     train, test = federated_classification(
         k_data, n, input_dim=t.input_dim, num_classes=t.num_classes,
         per_client=t.samples_per_client)
@@ -40,18 +38,18 @@ def main():
         batch_size=t.batch_size, lambda_grad=0.3, lambda_tx=0.3,
         unify_period=50, psi=6, topology="cycle", max_delay_windows=4,
         channel=ChannelConfig(message_bytes=t.message_bytes, gamma_max=10.0))
-    q, adj = build_graph(cfg)
-    st = init_state(k_sim, cfg, params0)
 
-    tx_, ty_ = test
-    for seg in range(6):
-        st = run_windows(st, cfg, q, adj, loss, train, 100)
-        per = jax.vmap(lambda p: acc(p, tx_, ty_))(st.params)
-        vg = virtual_global_model(st.params)
-        print(f"window {int(st.window_idx):4d}: mean client acc {float(per.mean()):.3f} "
-              f"(std {float(per.std()):.4f}), virtual-global acc "
-              f"{float(acc(vg, tx_, ty_)):.3f}, msgs this period "
-              f"{int(st.accept_count.sum())}")
+    st, trace = simulate("draco", cfg, params0, loss, train, num_steps=600,
+                         key=k_sim, eval_every=100, eval_fn=acc, eval_data=test)
+    for step, a, c in zip(trace.step, trace.metrics["accuracy"],
+                          trace.metrics["consensus"]):
+        print(f"window {int(step):4d}: mean client acc {float(a):.3f}, "
+              f"consensus distance {float(c):.4f}")
+
+    algo = get_algorithm("draco")
+    vg = virtual_global_model(algo.eval_params(st))
+    print(f"virtual-global acc {float(acc(vg, test[0], test[1])):.3f}, "
+          f"msgs accepted total {int(st.total_accept.sum())}")
     print("done — decoupled computation/communication, no global clock, "
           "row-stochastic gossip, Psi-capped reception.")
 

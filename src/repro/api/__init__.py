@@ -1,0 +1,44 @@
+"""`repro.api` — the unified algorithm interface and simulation driver.
+
+One simulator for DRACO and every baseline:
+
+    from repro.api import get_algorithm, list_algorithms, simulate
+
+    state, trace = simulate("draco", cfg, params0, loss, train, 600,
+                            key=key, eval_every=100,
+                            eval_fn=acc, eval_data=test)
+    print(trace.metrics["accuracy"])   # sampled in-jit, no host loop
+
+New methods register with `@register_algorithm("name")` and implement
+`init/step/eval_params/grads_per_step` (see `repro.api.algorithm`).
+"""
+from repro.api.algorithm import (
+    Algorithm,
+    get_algorithm,
+    list_algorithms,
+    register_algorithm,
+)
+from repro.api.context import SimContext, make_context
+from repro.api.simulate import (
+    SimTrace,
+    consensus_distance,
+    simulate,
+    steps_for_budget,
+)
+
+# importing the module registers the built-in algorithms
+from repro.api import algorithms  # noqa: F401
+
+__all__ = [
+    "Algorithm",
+    "SimContext",
+    "SimTrace",
+    "algorithms",
+    "consensus_distance",
+    "get_algorithm",
+    "list_algorithms",
+    "make_context",
+    "register_algorithm",
+    "simulate",
+    "steps_for_budget",
+]

@@ -1,0 +1,80 @@
+"""The unified `Algorithm` interface and its string-keyed registry.
+
+Every decentralized-learning method in this repo — DRACO itself and the
+paper's four Sec. 5 baselines — is exposed as an `Algorithm`: three pure
+functions over an opaque per-method state plus a compute-budget rate.
+The shared `repro.api.simulate` driver runs any of them inside a single
+`jax.lax.scan`, so a new protocol is a ~50-line plugin:
+
+    @register_algorithm("my-method")
+    class MyMethod:
+        def init(self, key, cfg, params0): ...
+        def step(self, state, ctx): ...          # ctx: SimContext
+        def eval_params(self, state): ...        # (N, ...) eval view
+        def grads_per_step(self, cfg): ...       # expected local grads
+                                                 #   per client per step
+
+Registry instances are singletons: `get_algorithm(name)` always returns
+the same object, so `jax.jit` with the algorithm as a static argument
+compiles once per (algorithm, config).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Protocol, Tuple, runtime_checkable
+
+
+@runtime_checkable
+class Algorithm(Protocol):
+    """Structural interface every registered method implements.
+
+    `init(key, cfg, params0)` replicates a single-client pytree into the
+    method's state; `step(state, ctx)` advances one round/window using
+    only `state` and the immutable `SimContext`; `eval_params(state)`
+    returns the (N, ...) parameter view metrics should be computed on
+    (push-sum methods de-bias here); `grads_per_step(cfg)` is the
+    expected number of local-SGD invocations per client per step, used
+    by `steps_for_budget` for compute-matched comparisons.
+    """
+
+    name: str
+
+    def init(self, key, cfg, params0) -> Any:
+        ...
+
+    def step(self, state, ctx) -> Any:
+        ...
+
+    def eval_params(self, state) -> Any:
+        ...
+
+    def grads_per_step(self, cfg) -> float:
+        ...
+
+
+_REGISTRY: Dict[str, Algorithm] = {}
+
+
+def register_algorithm(name: str):
+    """Class decorator: instantiate once and register under `name`."""
+
+    def deco(cls):
+        algo = cls() if isinstance(cls, type) else cls
+        algo.name = name
+        _REGISTRY[name] = algo
+        return cls
+
+    return deco
+
+
+def get_algorithm(name: str) -> Algorithm:
+    """Resolve a registered algorithm (always the same singleton)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown algorithm {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_algorithms() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,107 @@
+"""DRACO and the four Sec. 5 baselines as registered `Algorithm` plugins.
+
+Each plugin is a thin adapter over the legacy step functions in
+`repro.core.protocol` / `repro.core.baselines`, so the unified
+`simulate` driver is **bit-for-bit** equivalent to the legacy
+`run_windows` / `run_baseline` paths (tests/test_api.py asserts this).
+Push-sum de-biasing lives in `eval_params`, not in the step, matching
+the paper's evaluation convention.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.algorithm import register_algorithm
+from repro.core import baselines as baselines_lib
+from repro.core import protocol as protocol_lib
+
+# Partial-participation probability for the async baselines (the fig3
+# compute-matching assumes this value; it is the legacy default).
+P_ACTIVE = 0.5
+
+
+@register_algorithm("draco")
+class Draco:
+    """Paper Algorithm 1/2: decoupled Poisson grad/tx events, row-
+    stochastic gossip with Psi cap, delay ring-buffer, unification."""
+
+    def init(self, key, cfg, params0):
+        return protocol_lib.init_state(key, cfg, params0)
+
+    def step(self, state, ctx):
+        return protocol_lib.draco_window(
+            state, ctx.cfg, ctx.q, ctx.adj, ctx.loss_fn, ctx.data
+        )
+
+    def eval_params(self, state):
+        return state.params
+
+    def grads_per_step(self, cfg):
+        # P(>= 1 Poisson grad event in one superposition window)
+        return 1.0 - math.exp(-cfg.lambda_grad * cfg.window)
+
+
+class _Baseline:
+    """Shared init for the four baselines (BaselineState + positions)."""
+
+    def init(self, key, cfg, params0):
+        return baselines_lib.init_baseline_state(key, cfg, params0)
+
+    def eval_params(self, state):
+        return baselines_lib.eval_params(self.name, state)
+
+    def grads_per_step(self, cfg):
+        return 1.0
+
+
+@register_algorithm("sync-symm")
+class SyncSymm(_Baseline):
+    """Synchronous D-SGD with symmetric Metropolis mixing."""
+
+    def step(self, state, ctx):
+        return baselines_lib.sync_symm_round(
+            state, ctx.cfg, ctx.w_sym, ctx.adj, ctx.loss_fn, ctx.data
+        )
+
+
+@register_algorithm("sync-push")
+class SyncPush(_Baseline):
+    """Synchronous push-sum over the directed graph (gradient push)."""
+
+    def step(self, state, ctx):
+        state, _ = baselines_lib.sync_push_round(
+            state, ctx.cfg, ctx.adj, ctx.loss_fn, ctx.data
+        )
+        return state
+
+
+@register_algorithm("async-symm")
+class AsyncSymm(_Baseline):
+    """Async partial participation + symmetric mixing among survivors."""
+
+    def step(self, state, ctx):
+        return baselines_lib.async_symm_round(
+            state, ctx.cfg, ctx.w_sym, ctx.adj, ctx.loss_fn, ctx.data,
+            p_active=P_ACTIVE,
+        )
+
+    def grads_per_step(self, cfg):
+        return P_ACTIVE
+
+
+@register_algorithm("async-push")
+class AsyncPush(_Baseline):
+    """Async push-sum gossip (Digest-style half-mass pushes)."""
+
+    def step(self, state, ctx):
+        state, _ = baselines_lib.async_push_round(
+            state, ctx.cfg, ctx.adj, ctx.loss_fn, ctx.data,
+            p_active=P_ACTIVE,
+        )
+        return state
+
+    def grads_per_step(self, cfg):
+        return P_ACTIVE

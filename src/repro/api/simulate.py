@@ -1,0 +1,169 @@
+"""Unified compiled simulation driver for any registered `Algorithm`.
+
+`simulate(algo, cfg, params0, loss_fn, data, num_steps, ...)` runs the
+whole protocol inside **one** `jax.lax.scan` with *in-jit* metric
+sampling: every `eval_every` steps a `lax.cond` computes the metric dict
+(mean client accuracy on a held-out set, consensus distance) directly on
+device, so there are no per-segment host round-trips and no re-dispatch
+— one compile per (algorithm, config, loss), then a single device call
+regardless of how often you sample.
+
+`steps_for_budget` converts a compute budget (expected local-SGD
+invocations per client) into a step count for any algorithm, expressing
+the paper's compute-matched comparisons in one place.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.algorithm import Algorithm, get_algorithm
+from repro.api.context import SimContext, make_context
+
+
+class SimTrace(NamedTuple):
+    """In-jit metric trace, compressed to the sampled steps (host side).
+
+    `step[k]` is the 1-indexed step count after which `metrics[...][k]`
+    was measured; empty arrays when `eval_every == 0`.
+    """
+
+    step: np.ndarray  # (num_evals,) int
+    metrics: Dict[str, np.ndarray]  # each (num_evals,) float
+
+
+def consensus_distance(params) -> jax.Array:
+    """RMS distance of per-client params to the virtual global model:
+    sqrt(mean_i ||x_i - x_bar||^2), summed over all leaves (Sec. 2.1)."""
+    sq = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree_util.tree_leaves(params):
+        x = leaf.astype(jnp.float32)
+        xbar = x.mean(axis=0, keepdims=True)
+        sq = sq + ((x - xbar) ** 2).sum() / x.shape[0]
+    return jnp.sqrt(sq)
+
+
+def _metrics(algo, state, eval_fn, eval_data):
+    p = algo.eval_params(state)
+    out = {"consensus": consensus_distance(p)}
+    if eval_fn is not None:
+        ex, ey = eval_data
+        out["accuracy"] = jax.vmap(lambda pi: eval_fn(pi, ex, ey))(p).mean().astype(jnp.float32)
+    return out
+
+
+@partial(jax.jit, static_argnames=("algo", "num_steps", "eval_every", "eval_fn"))
+def _run(algo, ctx, state, eval_data, num_steps: int, eval_every: int, eval_fn):
+    """One fused scan over `num_steps` protocol steps + in-jit eval."""
+    if eval_every > 0:
+        zeros = {"consensus": jnp.zeros((), jnp.float32)}
+        if eval_fn is not None:
+            zeros["accuracy"] = jnp.zeros((), jnp.float32)
+
+        def body(s, i):
+            s = algo.step(s, ctx)
+            do = jnp.mod(i + 1, eval_every) == 0
+            m = jax.lax.cond(
+                do,
+                lambda st: _metrics(algo, st, eval_fn, eval_data),
+                lambda st: zeros,
+                s,
+            )
+            return s, dict(m, step=(i + 1).astype(jnp.int32), mask=do)
+
+    else:
+
+        def body(s, i):
+            return algo.step(s, ctx), None
+
+    state, trace = jax.lax.scan(body, state, jnp.arange(num_steps, dtype=jnp.int32))
+    return state, trace
+
+
+def simulate(
+    algo: Union[str, Algorithm],
+    cfg,
+    params0,
+    loss_fn: Optional[Callable] = None,
+    data: Any = None,
+    num_steps: int = 1,
+    *,
+    key=None,
+    eval_every: int = 0,
+    eval_fn: Optional[Callable] = None,
+    eval_data: Any = None,
+    ctx: Optional[SimContext] = None,
+    state: Any = None,
+    graph_key=None,
+):
+    """Run `num_steps` of any registered algorithm in one compiled call.
+
+    Args:
+      algo: registry name (e.g. "draco", "sync-push") or an `Algorithm`.
+      cfg: `DracoConfig`-style frozen config (static: hashable).
+      params0: single-client param pytree (ignored when `state` given).
+      loss_fn: `loss(params_i, x, y)` used by local SGD (static).
+      data: federated train shards `(xs, ys)` with leading client axis.
+      num_steps: protocol steps (DRACO windows / baseline rounds).
+      key: PRNGKey for state init (required unless `state` is given).
+      eval_every: sample metrics every k steps inside the scan
+        (`lax.cond`); 0 disables in-jit eval entirely.
+      eval_fn: `metric(params_i, ex, ey) -> scalar` (e.g. accuracy);
+        vmapped over clients and averaged. Requires `eval_data`.
+      eval_data: held-out `(ex, ey)` for `eval_fn`.
+      ctx: prebuilt `SimContext` to share graph/channel construction
+        across runs; built from (cfg, loss_fn, data) when omitted.
+      state: resume from an existing algorithm state.
+      graph_key: PRNGKey for random topologies (passed to `make_context`).
+
+    Returns:
+      (final_state, SimTrace) — the trace is compressed host-side to the
+      sampled steps.
+    """
+    if isinstance(algo, str):
+        algo = get_algorithm(algo)
+    if ctx is None:
+        ctx = make_context(cfg, loss_fn, data, graph_key=graph_key)
+    elif ctx.cfg != cfg:
+        # steps read ctx.cfg, init reads cfg — a silent mismatch would run
+        # the wrong config; rebind with ctx.replace(cfg=...) to share the
+        # traced graph arrays across config variants (e.g. a Psi sweep)
+        raise ValueError(
+            "ctx.cfg differs from cfg; pass ctx.replace(cfg=cfg) to reuse "
+            "a context across config variants")
+    if state is None:
+        if key is None:
+            raise ValueError("key is required when no state is given")
+        state = algo.init(key, cfg, params0)
+    if eval_fn is not None and eval_data is None:
+        raise ValueError("eval_fn requires eval_data=(ex, ey)")
+
+    state, raw = _run(algo, ctx, state, eval_data, int(num_steps),
+                      int(eval_every), eval_fn)
+
+    if raw is None:
+        return state, SimTrace(np.zeros((0,), np.int64), {})
+    mask = np.asarray(raw["mask"])
+    step = np.asarray(raw["step"])[mask]
+    metrics = {
+        k: np.asarray(v)[mask]
+        for k, v in raw.items()
+        if k not in ("mask", "step")
+    }
+    return state, SimTrace(step, metrics)
+
+
+def steps_for_budget(algo: Union[str, Algorithm], cfg,
+                     budget_grads: float) -> int:
+    """Steps giving ~`budget_grads` expected local-SGD invocations per
+    client — the compute-matched budget of the paper's Fig. 3 (DRACO
+    fires 1-exp(-lambda*w) grads/client/window, sync baselines 1/round,
+    async baselines p_active/round)."""
+    if isinstance(algo, str):
+        algo = get_algorithm(algo)
+    rate = algo.grads_per_step(cfg)
+    return max(1, int(round(budget_grads / max(rate, 1e-12))))

@@ -9,6 +9,14 @@
 
 All share DRACO's local-SGD machinery so comparisons isolate the
 *communication protocol*, not the optimizer.
+
+.. deprecated::
+   The module-level entry points (`init_baseline_state` / `run_baseline`
+   / `eval_params`) remain as the implementation substrate, but new code
+   should drive any baseline through the unified interface:
+   `repro.api.simulate("sync-push", ...)` etc. — every method in
+   `BASELINES` is a registered `repro.api` Algorithm. These names are
+   kept so existing imports continue to work.
 """
 from __future__ import annotations
 

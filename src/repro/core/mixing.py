@@ -26,6 +26,17 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels.gossip import ops as gossip_ops
 
 
+def _resolve_shard_map():
+    """Version-tolerant shard_map lookup: top-level `jax.shard_map` on
+    recent JAX, `jax.experimental.shard_map.shard_map` on older releases."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental.shard_map import shard_map as sm
+
+    return sm
+
+
 def receive_counts(q_mask) -> jax.Array:
     """Messages incoming per receiver j: count of nonzero column entries."""
     return (q_mask > 0).sum(axis=0)
@@ -94,7 +105,7 @@ def mix_ring_shardmap(mesh, client_axes, deltas, w_fwd: float = 0.5, w_bwd: floa
     P(clients, None, ...) spec forces an all-gather of expert/TP-sharded
     leaves over "model" before the permute — measured regression).
     """
-    shard_map = jax.shard_map
+    shard_map = _resolve_shard_map()
 
     from repro.sharding.specs import param_spec
 

@@ -17,6 +17,14 @@ Within a window each client independently (Poisson thinning):
 
 Computation and communication schedules are fully decoupled: the grad and
 tx processes are independent, and nothing ever waits.
+
+.. deprecated::
+   The module-level entry points (`init_state` / `draco_window` /
+   `run_windows` / `build_graph`) remain as the implementation substrate,
+   but new code should drive the protocol through the unified interface:
+   `repro.api.simulate("draco", ...)` — one compiled scan with in-jit
+   metric traces, shared with every baseline. These names are kept so
+   existing imports continue to work.
 """
 from __future__ import annotations
 
@@ -60,6 +68,7 @@ class DracoState(NamedTuple):
     pending: Any  # accumulated untransmitted local updates (N, ...)
     buffer: Any  # in-flight weighted deltas (D, N, ...)
     accept_count: jax.Array  # (N,) messages accepted this period
+    total_accept: jax.Array  # (N,) messages accepted over the whole run
     window_idx: jax.Array  # scalar int32
     key: jax.Array
     positions: jax.Array  # (N, 2) node coordinates (channel model)
@@ -82,6 +91,7 @@ def init_state(key, cfg: DracoConfig, params0) -> DracoState:
         pending=pending,
         buffer=buffer,
         accept_count=jnp.zeros((n,), jnp.int32),
+        total_accept=jnp.zeros((n,), jnp.int32),
         window_idx=jnp.zeros((), jnp.int32),
         key=ks,
         positions=pos,
@@ -169,6 +179,8 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data):
         delay_w = jnp.ones((n, n), jnp.int32)
 
     accept, accept_count = _psi_accept(k_psi, success, state.accept_count, cfg.psi)
+    # cumulative counter survives the periodic accept_count reset below
+    total_accept = state.total_accept + (accept_count - state.accept_count)
     w_eff = q * accept.astype(q.dtype)  # (sender, receiver)
 
     # enqueue into the ring buffer, bucketed by relative delay
@@ -207,6 +219,7 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data):
         pending=pending,
         buffer=buffer,
         accept_count=accept_count,
+        total_accept=total_accept,
         window_idx=widx + 1,
         key=k_next,
         positions=state.positions,

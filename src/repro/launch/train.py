@@ -5,6 +5,11 @@ full config on a real mesh) with the production-plane DRACO window step:
 per-client local grads, row-stochastic gossip mixing with per-window
 event/Psi masks, periodic unification, checkpointing and eval.
 
+Protocol-plane construction (gossip graph, row-stochastic Q, Metropolis
+weights) goes through `repro.api.make_context`, the same context the
+simulation driver uses, so the trainer and the paper-figure benchmarks
+share one graph/channel setup path.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \
       --steps 200 --clients 4 --mesh 2x2
@@ -19,10 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt_lib
+from repro.api import make_context
 from repro.configs.base import SHAPES, get_config, get_reduced
 from repro.core import mixing
 from repro.core.events import sample_event_masks
-from repro.core.topology import adjacency, row_stochastic
+from repro.core.protocol import DracoConfig
 from repro.launch import mesh as mesh_lib
 from repro.launch import steps as steps_lib
 from repro.models import model as M
@@ -83,6 +89,7 @@ def main(argv=None):
     n = args.clients
     key = jax.random.PRNGKey(args.seed)
     k_init, k_data, k_ev = jax.random.split(key, 3)
+    k_graph = jax.random.fold_in(key, 3)  # keeps legacy k_* streams intact
 
     # mesh: use whatever devices exist, (data=n, model=rest) if possible
     n_dev = len(jax.devices())
@@ -95,8 +102,13 @@ def main(argv=None):
     params = jax.tree_util.tree_map(
         lambda p: jnp.broadcast_to(p[None], (n,) + p.shape).copy(), params0
     )
-    adj = adjacency(args.topology, n)
-    q = row_stochastic(adj)
+    # protocol-plane context: graph + weights built once, same path the
+    # unified simulation driver uses (repro.api)
+    proto_cfg = DracoConfig(num_clients=n, topology=args.topology,
+                            psi=args.psi, unify_period=args.unify_every,
+                            lambda_tx=args.lambda_tx, channel=None)
+    ctx = make_context(proto_cfg, graph_key=k_graph)
+    q = ctx.q
     data = make_batches(k_data, cfg, n, per_client=8 * args.batch_per_client,
                         seq=args.seq)
 
