@@ -1,7 +1,13 @@
 """Shared benchmark utilities."""
+import json
 import time
 
 import jax
+
+# name -> us_per_call for everything emitted this process; written out as
+# BENCH_gossip.json by benchmarks.run so the perf trajectory is tracked
+# across PRs (CI uploads it as an artifact).
+RESULTS = {}
 
 
 def time_fn(fn, *args, warmup=2, iters=10):
@@ -18,4 +24,13 @@ def time_fn(fn, *args, warmup=2, iters=10):
 
 
 def emit(name, us, derived=""):
+    RESULTS[name] = us
     print(f"{name},{us:.1f},{derived}")
+
+
+def write_json(path="BENCH_gossip.json"):
+    """Machine-readable mirror of the CSV: {name: us_per_call}."""
+    with open(path, "w") as f:
+        json.dump(RESULTS, f, indent=1, sort_keys=True)
+    print(f"# wrote {path} ({len(RESULTS)} entries)")
+    return path

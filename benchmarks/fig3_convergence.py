@@ -63,8 +63,9 @@ def run(task_name="emnist", segments=8, seg_windows=100, seg_rounds=None,
     # per-segment compute budget = DRACO's expected grads over one segment
     budget = seg_windows * get_algorithm("draco").grads_per_step(cfg)
 
-    # one shared context: graph + weight matrices built once for all methods
-    ctx = make_context(cfg, loss, train)
+    # one shared context: graph, weight matrices and flat-plane layout
+    # built once for all methods
+    ctx = make_context(cfg, loss, train, params0=params0)
     curves = {}
     for name in ("draco",) + tuple(BASELINES):
         algo = get_algorithm(name)

@@ -26,8 +26,9 @@ def run(task_name="emnist", psis=(1, 2, 4, 8, 24), windows=600, seed=0,
         num_clients=None, out_dir="results", segments=6):
     cfg0, train, test, params0, loss, acc, key = setup(task_name, seed, num_clients)
     seg_w = max(1, windows // segments)
-    # graph/weights built once; per-psi runs rebind only the static config
-    ctx0 = make_context(cfg0, loss, train)
+    # graph/weights/flat layout built once; per-psi runs rebind only the
+    # static config
+    ctx0 = make_context(cfg0, loss, train, params0=params0)
     results = {}
     for psi in psis:
         cfg = cfg0.replace(psi=int(psi))

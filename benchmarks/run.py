@@ -4,7 +4,10 @@ Protocol-level benches run through the unified ``repro.api`` interface
 (``simulate`` + the algorithm registry); ``bench_simulate_fused`` tracks
 the in-jit-eval speedup of the fused driver vs the legacy segment loop.
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV and mirrors the timings to
+``BENCH_gossip.json`` (name -> us_per_call; uploaded as a CI artifact so
+the perf trajectory is tracked across PRs). Measured numbers and knob
+guidance live in EXPERIMENTS.md.
 
   PYTHONPATH=src python -m benchmarks.run            # full set
   PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized
@@ -33,9 +36,18 @@ def bench_gossip_mix(quick=False):
     us = time_fn(f, q, deltas)
     emit("gossip_mix_xla_25x149k", us, f"{n*n*d*2/us*1e6/1e9:.1f}GFLOPs")
     if not quick:
-        us_k = time_fn(lambda: gossip_mix(q, deltas[:, :4096], interpret=True),
+        # interpret auto-selects by backend: compiled kernel on TPU, the
+        # (slow, correctness-only) interpreter elsewhere — hence tiny D.
+        # Name the row by what actually ran so cross-machine trajectories
+        # never mix interpreter and compiled-kernel timings.
+        from repro.kernels.gossip.ops import default_use_kernel
+
+        us_k = time_fn(lambda: gossip_mix(q, deltas[:, :4096]),
                        warmup=1, iters=3)
-        emit("gossip_mix_pallas_interpret_4k", us_k, "correctness-path")
+        if default_use_kernel():
+            emit("gossip_mix_pallas_4k", us_k, "kernel-path")
+        else:
+            emit("gossip_mix_pallas_interpret_4k", us_k, "correctness-path")
 
 
 def bench_ssd(quick=False):
@@ -60,24 +72,46 @@ def bench_ssd(quick=False):
 
 
 def bench_draco_window(quick=False):
-    """Protocol-layer: one compiled DRACO superposition window at the
-    paper's experiment scale (N=25 clients, EMNIST-like MLP)."""
+    """Protocol-layer: the fused delay-bucketed gossip engine vs the seed
+    per-bucket-einsum loop, at the paper's experiment scale (N=25 clients,
+    EMNIST-like MLP ~146k params, wireless channel, deep D=8 ring).
+
+    Both paths are timed per window inside their compiled `run_windows`
+    scan — the production shape. The acceptance bar for PR 2 is >= 2x on
+    the fused/legacy pair below (see EXPERIMENTS.md for the knob sweep).
+    """
     from benchmarks.fig3_convergence import setup
-    from repro.core.protocol import build_graph, draco_window, init_state
+    from repro.core.protocol import (
+        build_graph,
+        init_state,
+        init_state_legacy,
+        run_windows,
+        run_windows_legacy,
+    )
 
     n = 8 if quick else 25
+    D = 4 if quick else 8
+    windows = 6 if quick else 16
+    iters = 3 if quick else 5
     cfg, train, test, params0, loss, acc, key = setup("emnist", num_clients=n)
+    cfg = cfg.replace(max_delay_windows=D)
     q, adj = build_graph(cfg)
-    st = init_state(key, cfg, params0)
-    step = jax.jit(lambda s: draco_window(s, cfg, q, adj, loss, train))
-    us = time_fn(step, st, iters=5)
-    emit(f"draco_window_N{n}", us, f"{cfg.topology}")
+
+    st_f = init_state(key, cfg, params0)
+    st_l = init_state_legacy(key, cfg, params0)
+    fused = lambda: run_windows(st_f, cfg, q, adj, loss, train, windows)
+    legacy = lambda: run_windows_legacy(st_l, cfg, q, adj, loss, train, windows)
+    us_f = time_fn(fused, warmup=1, iters=iters) / windows
+    us_l = time_fn(legacy, warmup=1, iters=iters) / windows
+    emit(f"draco_window_fused_N{n}_D{D}", us_f,
+         f"speedup_vs_seed_loop={us_l/us_f:.2f}x")
+    emit(f"draco_window_legacy_N{n}_D{D}", us_l, "seed-path")
 
 
 def bench_simulate_fused(quick=False):
-    """API-layer: fused `repro.api.simulate` (one scan, in-jit eval via
-    lax.cond) vs the legacy segment loop (host round-trip eval between
-    `run_windows` calls). Same protocol, same eval cadence."""
+    """API-layer: fused `repro.api.simulate` (one nested scan, in-jit
+    eval at each eval point) vs the legacy segment loop (host round-trip
+    eval between `run_windows` calls). Same protocol, same eval cadence."""
     from benchmarks.fig3_convergence import setup
     from repro.api import simulate
     from repro.core.protocol import build_graph, init_state, run_windows
@@ -164,15 +198,23 @@ BENCHES = {
 
 
 def main() -> None:
+    from benchmarks.common import write_json
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--json", default="BENCH_gossip.json",
+                    help="machine-readable results path ('' to skip)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and name != args.only:
             continue
         fn(quick=args.quick)
+    # a partial (--only) run must not clobber the tracked full-results
+    # file; write it only for full sweeps or an explicit --json override
+    if args.json and not (args.only and args.json == "BENCH_gossip.json"):
+        write_json(args.json)
 
 
 if __name__ == "__main__":

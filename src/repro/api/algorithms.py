@@ -33,7 +33,8 @@ class Draco:
 
     def step(self, state, ctx):
         return protocol_lib.draco_window(
-            state, ctx.cfg, ctx.q, ctx.adj, ctx.loss_fn, ctx.data
+            state, ctx.cfg, ctx.q, ctx.adj, ctx.loss_fn, ctx.data,
+            spec=ctx.flat_spec,
         )
 
     def eval_params(self, state):

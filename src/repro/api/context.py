@@ -2,16 +2,18 @@
 
 Bundles everything a protocol step needs besides its own state — the
 gossip graph (boolean adjacency, row-stochastic Q, symmetric Metropolis
-weights), the loss, the federated data shards, and optional node
-positions — so graph/channel construction happens **once** per run
-instead of once per method (the legacy `run_baseline` rebuilt the graph
-inside every jit).
+weights), the loss, the federated data shards, the flat-plane layout
+(`FlatSpec`: per-leaf shapes/offsets into the contiguous (N, Dflat)
+buffer, computed once per run) and optional node positions — so
+graph/channel construction happens **once** per run instead of once per
+method (the legacy `run_baseline` rebuilt the graph inside every jit).
 
 `SimContext` is registered as a pytree: `(q, adj, w_sym, data,
-positions)` are traced children, while `(cfg, loss_fn)` ride as static
-aux data. Passing a context through `jax.jit` therefore recompiles only
-when the config or loss function changes, exactly like the legacy
-`static_argnames=("cfg", "loss_fn")` entry points.
+positions)` are traced children, while `(cfg, loss_fn, flat_spec)` ride
+as static aux data. Passing a context through `jax.jit` therefore
+recompiles only when the config, loss function or parameter layout
+changes, exactly like the legacy `static_argnames=("cfg", "loss_fn")`
+entry points.
 """
 from __future__ import annotations
 
@@ -20,6 +22,7 @@ from typing import Any, Callable, Optional
 import jax
 
 from repro.core import channel as channel_lib
+from repro.core import flat as flat_lib
 from repro.core.channel import ChannelConfig
 from repro.core.protocol import build_graph
 from repro.core.topology import metropolis
@@ -27,11 +30,14 @@ from repro.core.topology import metropolis
 
 @jax.tree_util.register_pytree_node_class
 class SimContext:
-    """Immutable bundle of (cfg, loss_fn, q, adj, w_sym, data, positions)."""
+    """Immutable bundle of (cfg, loss_fn, q, adj, w_sym, data, positions,
+    flat_spec)."""
 
-    __slots__ = ("cfg", "loss_fn", "q", "adj", "w_sym", "data", "positions")
+    __slots__ = ("cfg", "loss_fn", "q", "adj", "w_sym", "data", "positions",
+                 "flat_spec")
 
-    def __init__(self, cfg, loss_fn, q, adj, w_sym, data, positions=None):
+    def __init__(self, cfg, loss_fn, q, adj, w_sym, data, positions=None,
+                 flat_spec=None):
         object.__setattr__(self, "cfg", cfg)
         object.__setattr__(self, "loss_fn", loss_fn)
         object.__setattr__(self, "q", q)
@@ -39,6 +45,7 @@ class SimContext:
         object.__setattr__(self, "w_sym", w_sym)
         object.__setattr__(self, "data", data)
         object.__setattr__(self, "positions", positions)
+        object.__setattr__(self, "flat_spec", flat_spec)
 
     def __setattr__(self, name, value):
         raise AttributeError("SimContext is immutable")
@@ -50,14 +57,14 @@ class SimContext:
 
     def tree_flatten(self):
         children = (self.q, self.adj, self.w_sym, self.data, self.positions)
-        aux = (self.cfg, self.loss_fn)
+        aux = (self.cfg, self.loss_fn, self.flat_spec)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        cfg, loss_fn = aux
+        cfg, loss_fn, flat_spec = aux
         q, adj, w_sym, data, positions = children
-        return cls(cfg, loss_fn, q, adj, w_sym, data, positions)
+        return cls(cfg, loss_fn, q, adj, w_sym, data, positions, flat_spec)
 
     def __repr__(self):
         n = self.q.shape[0] if self.q is not None else "?"
@@ -66,15 +73,18 @@ class SimContext:
 
 
 def make_context(cfg, loss_fn: Optional[Callable] = None, data: Any = None, *,
-                 graph_key=None, place_key=None) -> SimContext:
+                 params0: Any = None, graph_key=None,
+                 place_key=None) -> SimContext:
     """Build a `SimContext` from a `DracoConfig`-style config.
 
     Constructs the adjacency once and derives both weight matrices from
     it: row-stochastic Q (DRACO, push methods) and symmetric Metropolis
-    weights (the *-symm baselines). `graph_key` seeds random topologies
-    (e.g. "erdos"); `place_key`, when given, additionally samples node
-    positions for the wireless channel model (methods that carry
-    positions in their own state may ignore it).
+    weights (the *-symm baselines). `params0`, when given, fixes the
+    flat parameter plane layout (`FlatSpec` shapes/offsets) once per
+    run. `graph_key` seeds random topologies (e.g. "erdos");
+    `place_key`, when given, additionally samples node positions for
+    the wireless channel model (methods that carry positions in their
+    own state may ignore it).
     """
     q, adj = build_graph(cfg, key=graph_key)
     w_sym = metropolis(adj)
@@ -83,4 +93,7 @@ def make_context(cfg, loss_fn: Optional[Callable] = None, data: Any = None, *,
         positions = channel_lib.place_nodes(
             place_key, cfg.num_clients, cfg.channel or ChannelConfig()
         )
-    return SimContext(cfg, loss_fn, q, adj, w_sym, data, positions)
+    flat_spec = None
+    if params0 is not None:
+        flat_spec = flat_lib.spec_for(params0, cfg.num_clients)
+    return SimContext(cfg, loss_fn, q, adj, w_sym, data, positions, flat_spec)

@@ -1,12 +1,13 @@
 """Unified compiled simulation driver for any registered `Algorithm`.
 
 `simulate(algo, cfg, params0, loss_fn, data, num_steps, ...)` runs the
-whole protocol inside **one** `jax.lax.scan` with *in-jit* metric
-sampling: every `eval_every` steps a `lax.cond` computes the metric dict
-(mean client accuracy on a held-out set, consensus distance) directly on
-device, so there are no per-segment host round-trips and no re-dispatch
-— one compile per (algorithm, config, loss), then a single device call
-regardless of how often you sample.
+whole protocol inside **one** compiled nested scan with *in-jit* metric
+sampling: the outer scan walks the eval points, each inner scan runs
+`eval_every` protocol steps and then computes the metric dict (mean
+client accuracy on a held-out set, consensus distance) directly on
+device, so there are no per-segment host round-trips, no re-dispatch,
+and no per-step trace memory — one compile per (algorithm, config,
+loss), then a single device call regardless of how often you sample.
 
 `steps_for_budget` converts a compute budget (expected local-SGD
 invocations per client) into a step count for any algorithm, expressing
@@ -26,10 +27,12 @@ from repro.api.context import SimContext, make_context
 
 
 class SimTrace(NamedTuple):
-    """In-jit metric trace, compressed to the sampled steps (host side).
+    """In-jit metric trace, sized to the sampled steps on device.
 
     `step[k]` is the 1-indexed step count after which `metrics[...][k]`
-    was measured; empty arrays when `eval_every == 0`.
+    was measured; empty arrays when `eval_every == 0`. The arrays have
+    exactly `num_steps // eval_every` rows — metrics are only ever
+    materialized at the sampled steps (see `_run`).
     """
 
     step: np.ndarray  # (num_evals,) int
@@ -38,13 +41,15 @@ class SimTrace(NamedTuple):
 
 def consensus_distance(params) -> jax.Array:
     """RMS distance of per-client params to the virtual global model:
-    sqrt(mean_i ||x_i - x_bar||^2), summed over all leaves (Sec. 2.1)."""
-    sq = jnp.zeros((), jnp.float32)
-    for leaf in jax.tree_util.tree_leaves(params):
-        x = leaf.astype(jnp.float32)
-        xbar = x.mean(axis=0, keepdims=True)
-        sq = sq + ((x - xbar) ** 2).sum() / x.shape[0]
-    return jnp.sqrt(sq)
+    sqrt(mean_i ||x_i - x_bar||^2) over all coordinates (Sec. 2.1).
+
+    Computed on the flat parameter plane: one (N, Dflat) ravel and a
+    single fused reduction instead of a per-leaf loop."""
+    from repro.core import flat as flat_lib
+
+    x = flat_lib.ravel_clients(params)
+    xbar = x.mean(axis=0, keepdims=True)
+    return jnp.sqrt(((x - xbar) ** 2).sum() / x.shape[0])
 
 
 def _metrics(algo, state, eval_fn, eval_data):
@@ -58,29 +63,35 @@ def _metrics(algo, state, eval_fn, eval_data):
 
 @partial(jax.jit, static_argnames=("algo", "num_steps", "eval_every", "eval_fn"))
 def _run(algo, ctx, state, eval_data, num_steps: int, eval_every: int, eval_fn):
-    """One fused scan over `num_steps` protocol steps + in-jit eval."""
-    if eval_every > 0:
-        zeros = {"consensus": jnp.zeros((), jnp.float32)}
-        if eval_fn is not None:
-            zeros["accuracy"] = jnp.zeros((), jnp.float32)
+    """One fused scan over `num_steps` protocol steps + in-jit eval.
 
-        def body(s, i):
-            s = algo.step(s, ctx)
-            do = jnp.mod(i + 1, eval_every) == 0
-            m = jax.lax.cond(
-                do,
-                lambda st: _metrics(algo, st, eval_fn, eval_data),
-                lambda st: zeros,
-                s,
-            )
-            return s, dict(m, step=(i + 1).astype(jnp.int32), mask=do)
+    Nested scan: an outer scan over the `num_steps // eval_every` eval
+    points, each running `eval_every` protocol steps inline and emitting
+    one metrics row — so the device trace is `(num_evals,)` rather than
+    a dense `(num_steps,)` carry that is mostly thrown away host-side
+    (the pre-PR2 `lax.cond` sampling traced every step: ~8 bytes/metric/
+    step of wasted HBM and a scan carry that grew with the eval cadence
+    ignored). Leftover steps past the last eval point run in a trailing
+    metric-free scan."""
 
-    else:
+    def step_only(s, _):
+        return algo.step(s, ctx), None
 
-        def body(s, i):
-            return algo.step(s, ctx), None
+    if eval_every <= 0:
+        state, _ = jax.lax.scan(step_only, state, None, length=num_steps)
+        return state, None
 
-    state, trace = jax.lax.scan(body, state, jnp.arange(num_steps, dtype=jnp.int32))
+    chunks, rem = divmod(num_steps, eval_every)
+
+    def chunk_body(s, k):
+        s, _ = jax.lax.scan(step_only, s, None, length=eval_every)
+        m = _metrics(algo, s, eval_fn, eval_data)
+        return s, dict(m, step=(k + 1) * eval_every)
+
+    state, trace = jax.lax.scan(chunk_body, state,
+                                jnp.arange(chunks, dtype=jnp.int32))
+    if rem:
+        state, _ = jax.lax.scan(step_only, state, None, length=rem)
     return state, trace
 
 
@@ -110,8 +121,10 @@ def simulate(
       data: federated train shards `(xs, ys)` with leading client axis.
       num_steps: protocol steps (DRACO windows / baseline rounds).
       key: PRNGKey for state init (required unless `state` is given).
-      eval_every: sample metrics every k steps inside the scan
-        (`lax.cond`); 0 disables in-jit eval entirely.
+      eval_every: sample metrics every k steps, on device, via a nested
+        scan that materializes one metrics row per sample (the trace is
+        `(num_steps // eval_every,)` — nothing is traced at the other
+        steps); 0 disables in-jit eval entirely.
       eval_fn: `metric(params_i, ex, ey) -> scalar` (e.g. accuracy);
         vmapped over clients and averaged. Requires `eval_data`.
       eval_data: held-out `(ex, ey)` for `eval_fn`.
@@ -121,13 +134,14 @@ def simulate(
       graph_key: PRNGKey for random topologies (passed to `make_context`).
 
     Returns:
-      (final_state, SimTrace) — the trace is compressed host-side to the
-      sampled steps.
+      (final_state, SimTrace) — the trace holds exactly the sampled
+      steps (sized on device; no host-side filtering).
     """
     if isinstance(algo, str):
         algo = get_algorithm(algo)
     if ctx is None:
-        ctx = make_context(cfg, loss_fn, data, graph_key=graph_key)
+        ctx = make_context(cfg, loss_fn, data, params0=params0,
+                           graph_key=graph_key)
     elif ctx.cfg != cfg:
         # steps read ctx.cfg, init reads cfg — a silent mismatch would run
         # the wrong config; rebind with ctx.replace(cfg=...) to share the
@@ -147,13 +161,8 @@ def simulate(
 
     if raw is None:
         return state, SimTrace(np.zeros((0,), np.int64), {})
-    mask = np.asarray(raw["mask"])
-    step = np.asarray(raw["step"])[mask]
-    metrics = {
-        k: np.asarray(v)[mask]
-        for k, v in raw.items()
-        if k not in ("mask", "step")
-    }
+    step = np.asarray(raw["step"])
+    metrics = {k: np.asarray(v) for k, v in raw.items() if k != "step"}
     return state, SimTrace(step, metrics)
 
 

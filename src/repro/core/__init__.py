@@ -1,19 +1,39 @@
+from repro.core.flat import (
+    FlatSpec,
+    ravel_clients,
+    spec_for,
+    spec_of,
+    unravel_clients,
+)
 from repro.core.protocol import (
     DracoConfig,
     DracoState,
+    DracoStateLegacy,
     build_graph,
     draco_window,
+    draco_window_legacy,
     init_state,
+    init_state_legacy,
     run_windows,
+    run_windows_legacy,
     virtual_global_model,
 )
 
 __all__ = [
     "DracoConfig",
     "DracoState",
+    "DracoStateLegacy",
+    "FlatSpec",
     "build_graph",
     "draco_window",
+    "draco_window_legacy",
     "init_state",
+    "init_state_legacy",
+    "ravel_clients",
     "run_windows",
+    "run_windows_legacy",
+    "spec_for",
+    "spec_of",
+    "unravel_clients",
     "virtual_global_model",
 ]

@@ -1,0 +1,93 @@
+"""Flat parameter plane: the per-client pytree as one contiguous buffer.
+
+Every DRACO protocol quantity with a leading client axis — pending
+updates, in-flight payloads, consensus residuals — is a pytree whose
+leaves share the same (N, ...) layout.  Mixing, delay-bucketed gossip,
+consensus distance and hub unification are all *linear* in the
+parameters, so none of them care about leaf boundaries: they are
+cheaper and simpler as single contiguous ops on an ``(N, Dflat)``
+matrix than as per-leaf ``tree_map`` loops (one GEMM / one reduction
+instead of ``num_leaves`` dispatches, and a layout the gossip kernels
+can tile directly).
+
+``spec_of`` computes the flattening plan (leaf shapes, dtypes, offsets)
+once per run — it is static, hashable metadata that rides through jit
+(stored on ``SimContext`` by ``repro.api.make_context``).  ``ravel_clients``
+and ``unravel_clients`` are exact: reshape + concatenate, no arithmetic,
+so a ravel/unravel round-trip is bit-for-bit at any dtype.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class FlatSpec(NamedTuple):
+    """Static flattening plan for a client-stacked pytree.
+
+    Hashable (tuples + treedef only), so it can ride through ``jax.jit``
+    as auxiliary data.  ``offsets[i]:offsets[i]+sizes[i]`` is leaf ``i``'s
+    column range in the flat ``(N, dim)`` buffer.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]  # full leaf shapes, incl. client axis
+    dtypes: Tuple[Any, ...]
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]  # per-client flat width of each leaf
+    dim: int  # Dflat = sum(sizes)
+
+    @property
+    def num_clients(self) -> int:
+        return self.shapes[0][0] if self.shapes else 0
+
+
+def spec_of(tree) -> FlatSpec:
+    """Flattening plan for a pytree whose leaves are (N, ...) arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes, dtypes, offsets, sizes = [], [], [], []
+    off = 0
+    for leaf in leaves:
+        size = int(np.prod(leaf.shape[1:], dtype=np.int64)) if leaf.ndim > 1 else 1
+        shapes.append(tuple(leaf.shape))
+        dtypes.append(jnp.dtype(leaf.dtype))
+        offsets.append(off)
+        sizes.append(size)
+        off += size
+    return FlatSpec(treedef, tuple(shapes), tuple(dtypes), tuple(offsets),
+                    tuple(sizes), off)
+
+
+def spec_for(params0, num_clients: int) -> FlatSpec:
+    """Plan for a *single-client* pytree replicated across ``num_clients``
+    (the layout produced by ``protocol.init_state``)."""
+    stacked_shapes = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct((num_clients,) + tuple(p.shape), p.dtype),
+        params0,
+    )
+    return spec_of(stacked_shapes)
+
+
+def ravel_clients(tree, dtype=jnp.float32) -> jax.Array:
+    """(N, ...) pytree -> contiguous (N, Dflat) matrix in ``dtype``.
+
+    Pure reshape + concat (exact at matching dtype); leaf order follows
+    ``jax.tree_util`` flattening, matching ``spec_of``.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(n, -1).astype(dtype) for l in leaves], axis=1
+    )
+
+
+def unravel_clients(flat: jax.Array, spec: FlatSpec):
+    """(N, Dflat) matrix -> pytree per ``spec`` (leaf dtypes restored)."""
+    leaves = []
+    for shape, dtype, off, size in zip(spec.shapes, spec.dtypes,
+                                       spec.offsets, spec.sizes):
+        leaves.append(flat[:, off:off + size].reshape(shape).astype(dtype))
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)

@@ -61,24 +61,29 @@ def psi_cap_mask(key, q, psi: int):
     return jnp.where(keep, q, 0.0)
 
 
-def mix_dense(q_eff, deltas, *, use_kernel: bool = False, interpret: bool = True,
+def mix_dense(q_eff, deltas, *, use_kernel=None, interpret=None,
               compute_dtype=jnp.float32):
-    """x_add = Q^T @ deltas per leaf. q_eff (N,N) already masked/weighted.
+    """x_add = Q^T @ deltas on the flat plane. q_eff (N,N) masked/weighted.
+
+    The per-client pytree is raveled to one contiguous (N, Dflat) matrix
+    (`repro.core.flat`), mixed with a single GEMM — the Pallas gossip
+    kernel on TPU (`use_kernel=None` auto-selects by backend), a plain
+    einsum elsewhere — and unraveled back, instead of one einsum per leaf.
 
     compute_dtype: accumulation dtype of the mixing matmul. f32 is the
     paper-faithful default; bf16 halves the all-gather bytes on the mesh
     (beyond-paper knob, see EXPERIMENTS.md §Perf)."""
+    from repro.core import flat as flat_lib
 
-    def leaf_mix(d):
-        if use_kernel and d.ndim >= 2:
-            flat = d.reshape(d.shape[0], -1)
-            out = gossip_ops.gossip_mix(q_eff, flat, interpret=interpret)
-            return out.reshape(d.shape)
-        return jnp.einsum(
-            "nm,n...->m...", q_eff.astype(compute_dtype), d.astype(compute_dtype)
-        ).astype(d.dtype)
-
-    return jax.tree_util.tree_map(leaf_mix, deltas)
+    if use_kernel is None:
+        use_kernel = gossip_ops.default_use_kernel()
+    spec = flat_lib.spec_of(deltas)
+    flat = flat_lib.ravel_clients(deltas, dtype=compute_dtype)
+    if use_kernel:
+        out = gossip_ops.gossip_mix(q_eff, flat, interpret=interpret)
+    else:
+        out = jnp.einsum("nm,nk->mk", q_eff.astype(compute_dtype), flat)
+    return flat_lib.unravel_clients(out, spec)
 
 
 def apply_mix(params, q_eff, deltas, **kw):

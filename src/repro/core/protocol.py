@@ -18,13 +18,27 @@ Within a window each client independently (Poisson thinning):
 Computation and communication schedules are fully decoupled: the grad and
 tx processes are independent, and nothing ever waits.
 
-.. deprecated::
-   The module-level entry points (`init_state` / `draco_window` /
-   `run_windows` / `build_graph`) remain as the implementation substrate,
-   but new code should drive the protocol through the unified interface:
-   `repro.api.simulate("draco", ...)` — one compiled scan with in-jit
-   metric traces, shared with every baseline. These names are kept so
-   existing imports continue to work.
+Fused gossip engine (PR 2)
+--------------------------
+The communication state lives on the *flat parameter plane*
+(`repro.core.flat`): `DracoState.buffer` is one contiguous
+``(D, N, Dflat)`` f32 ring of **raw broadcast payloads**, and the
+delay-bucketed mixing is deferred from enqueue to drain:
+
+  - enqueue (send window w): write the sender's flat pending matrix into
+    ring slot ``w % D`` together with that window's effective weights
+    ``Q ⊙ accept`` and per-link delay matrix — O(N·Dflat) instead of the
+    seed's D-1 full-pytree masked einsums per window;
+  - drain (window w): everything arriving now is
+    ``sum_j (Q_j ⊙ [delay_j == age_j])^T @ buffer[slot_j]`` over the D-1
+    stored broadcasts — one fused pass (`gossip_ops.gossip_drain`):
+    a single Pallas grid on TPU, an unrolled GEMM loop with
+    empty-bucket skipping elsewhere.
+
+The accumulation order (oldest broadcast first) matches the seed ring
+buffer exactly, so the fused engine is bit-for-bit equal to the legacy
+path at f32 — enforced by tests/test_protocol_parity.py against the
+`*_legacy` reference implementations kept at the bottom of this module.
 """
 from __future__ import annotations
 
@@ -37,10 +51,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import channel as channel_lib
-from repro.core import mixing
+from repro.core import flat as flat_lib
 from repro.core.channel import ChannelConfig
 from repro.core.events import sample_event_masks
 from repro.core.topology import adjacency, row_stochastic
+from repro.kernels.gossip import ops as gossip_ops
 
 
 @dataclass(frozen=True)
@@ -64,9 +79,11 @@ class DracoConfig:
 
 
 class DracoState(NamedTuple):
-    params: Any  # leaves (N, ...)
-    pending: Any  # accumulated untransmitted local updates (N, ...)
-    buffer: Any  # in-flight weighted deltas (D, N, ...)
+    params: Any  # pytree, leaves (N, ...)
+    pending: jax.Array  # (N, Dflat) f32 — accumulated untransmitted updates
+    buffer: jax.Array  # (D, N, Dflat) f32 — raw broadcast payload ring
+    w_ring: jax.Array  # (D, N, N) f32 — per-slot effective weights Q ⊙ accept
+    delay_ring: jax.Array  # (D, N, N) int32 — per-slot per-link delays
     accept_count: jax.Array  # (N,) messages accepted this period
     total_accept: jax.Array  # (N,) messages accepted over the whole run
     window_idx: jax.Array  # scalar int32
@@ -81,15 +98,14 @@ def init_state(key, cfg: DracoConfig, params0) -> DracoState:
     params = jax.tree_util.tree_map(
         lambda p: jnp.broadcast_to(p[None], (n,) + p.shape).copy(), params0
     )
-    pending = jax.tree_util.tree_map(jnp.zeros_like, params)
-    buffer = jax.tree_util.tree_map(
-        lambda p: jnp.zeros((d,) + p.shape, p.dtype), params
-    )
+    spec = flat_lib.spec_of(params)
     pos = channel_lib.place_nodes(kp, n, cfg.channel or ChannelConfig())
     return DracoState(
         params=params,
-        pending=pending,
-        buffer=buffer,
+        pending=jnp.zeros((n, spec.dim), jnp.float32),
+        buffer=jnp.zeros((d, n, spec.dim), jnp.float32),
+        w_ring=jnp.zeros((d, n, n), jnp.float32),
+        delay_ring=jnp.zeros((d, n, n), jnp.int32),
         accept_count=jnp.zeros((n,), jnp.int32),
         total_accept=jnp.zeros((n,), jnp.int32),
         window_idx=jnp.zeros((), jnp.int32),
@@ -140,11 +156,194 @@ def _psi_accept(key, success, accept_count, psi: int):
     return ok & success, new_count
 
 
-def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data):
-    """One superposition window. Returns new state."""
+def _tx_and_accept(state, cfg, q, adj, k_tx, k_chan, k_psi):
+    """Transmission events + channel + Psi cap (shared by both engines).
+
+    Returns (tx_mask (N,), w_eff (N,N), delay_w (N,N) int32,
+    accept_count, total_accept)."""
     n, D = cfg.num_clients, cfg.max_delay_windows
-    key = state.key
-    keys = jax.random.split(key, 8)
+    tx_mask = sample_event_masks(k_tx, cfg.lambda_tx, cfg.window, n)
+    if cfg.channel is not None and cfg.channel.enabled:
+        gamma, success = channel_lib.transmission_delays(
+            k_chan, state.positions, tx_mask, cfg.channel
+        )
+        delay_w = jnp.ceil(gamma / cfg.window).astype(jnp.int32)  # >= 1 typ.
+        delay_w = jnp.clip(delay_w, 1, D - 1)
+        success = success & adj
+    else:
+        success = adj & tx_mask[:, None]
+        delay_w = jnp.ones((n, n), jnp.int32)
+
+    accept, accept_count = _psi_accept(k_psi, success, state.accept_count, cfg.psi)
+    # cumulative counter survives the periodic accept_count reset
+    total_accept = state.total_accept + (accept_count - state.accept_count)
+    w_eff = q * accept.astype(q.dtype)  # (sender, receiver)
+    return tx_mask, w_eff, delay_w, accept_count, total_accept
+
+
+def _unify(params, accept_count, widx, cfg, n):
+    """Periodic unification: rotating hub broadcast + accept-count reset."""
+
+    def unify(args):
+        p, cnt = args
+        hub = jnp.mod((widx // jnp.maximum(cfg.unify_period, 1)), n)
+        p = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[hub][None], x.shape), p
+        )
+        return p, jnp.zeros_like(cnt)
+
+    do_unify = jnp.mod(widx + 1, cfg.unify_period) == 0
+    return jax.lax.cond(do_unify, unify, lambda a: a, (params, accept_count))
+
+
+def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data,
+                 spec=None):
+    """One superposition window on the fused gossip engine.
+
+    Bit-for-bit equal to `draco_window_legacy` at f32 (the parity suite
+    enforces it); see the module docstring for the enqueue/drain design.
+    `spec` is the flat-plane layout (`FlatSpec`); pass the one stored on
+    `SimContext` to share it across steps, or omit it to derive it from
+    `state.params` at trace time.
+    """
+    n, D = cfg.num_clients, cfg.max_delay_windows
+    keys = jax.random.split(state.key, 8)
+    k_next, k_grad, k_gsel, k_tx, k_chan, k_psi, k_hub, _ = keys
+    widx = state.window_idx
+    if spec is None:
+        spec = flat_lib.spec_of(state.params)
+
+    # --- 1. deliveries: fused delay-bucketed drain on the flat plane ------
+    # Stored broadcast of age j (sent in window widx-j) arrives now iff its
+    # per-link delay equals j.  Stack oldest-first so the f32 accumulation
+    # order matches the seed ring buffer exactly.
+    ages = jnp.arange(D - 1, 0, -1, dtype=jnp.int32)
+    slots = jnp.mod(widx - ages, D)
+    w_stack = state.w_ring[slots] * (
+        state.delay_ring[slots] == ages[:, None, None]
+    ).astype(state.w_ring.dtype)
+    arrivals_flat = gossip_ops.gossip_drain(w_stack, state.buffer, slots)
+    arrivals = flat_lib.unravel_clients(arrivals_flat, spec)
+    params = jax.tree_util.tree_map(
+        lambda p, a: p + a.astype(p.dtype), state.params, arrivals
+    )
+
+    # --- 2. gradient events ------------------------------------------------
+    grad_mask = sample_event_masks(k_grad, cfg.lambda_grad, cfg.window, n)
+    delta = local_updates(k_gsel, params, grad_mask, cfg, loss_fn, data)
+    pending = state.pending + flat_lib.ravel_clients(delta)
+    if cfg.apply_self_update:
+        params = jax.tree_util.tree_map(
+            lambda p, dl: p + dl.astype(p.dtype), params, delta
+        )
+
+    # --- 3. transmission events + channel ----------------------------------
+    tx_mask, w_eff, delay_w, accept_count, total_accept = _tx_and_accept(
+        state, cfg, q, adj, k_tx, k_chan, k_psi
+    )
+
+    # enqueue: write this window's broadcast (payload + per-link metadata)
+    # into ring slot widx % D; the bucketed mixing happens at drain time
+    slot = jnp.mod(widx, D)
+    buffer = jax.lax.dynamic_update_slice(
+        state.buffer, pending[None], (slot, 0, 0)
+    )
+    w_ring = state.w_ring.at[slot].set(w_eff)
+    delay_ring = state.delay_ring.at[slot].set(delay_w)
+
+    # senders clear their pending backlog (Lemma A.1 backups are now sent)
+    pending = pending * (~tx_mask).astype(jnp.float32)[:, None]
+
+    # --- 4. periodic unification -------------------------------------------
+    if cfg.unify_period > 0:
+        params, accept_count = _unify(params, accept_count, widx, cfg, n)
+
+    return DracoState(
+        params=params,
+        pending=pending,
+        buffer=buffer,
+        w_ring=w_ring,
+        delay_ring=delay_ring,
+        accept_count=accept_count,
+        total_accept=total_accept,
+        window_idx=widx + 1,
+        key=k_next,
+        positions=state.positions,
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "loss_fn", "num_windows"))
+def run_windows(state, cfg: DracoConfig, q, adj, loss_fn, data, num_windows: int):
+    def step(s, _):
+        return draco_window(s, cfg, q, adj, loss_fn, data), None
+
+    state, _ = jax.lax.scan(step, state, None, length=num_windows)
+    return state
+
+
+def build_graph(cfg: DracoConfig, key=None):
+    adj = adjacency(cfg.topology, cfg.num_clients, key=key)
+    q = row_stochastic(adj)
+    return q, adj
+
+
+def virtual_global_model(params):
+    """x_bar = E_i[x^(i)] (Sec. 2.1) — evaluation-only."""
+    return jax.tree_util.tree_map(lambda p: p.mean(axis=0), params)
+
+
+# ---------------------------------------------------------------------------
+# Seed reference engine (pre-fusion), kept verbatim as the bit-for-bit
+# oracle for the fused path (tests/test_protocol_parity.py) and as the
+# baseline of `benchmarks.run.bench_draco_window`.  Do not optimize.
+# ---------------------------------------------------------------------------
+
+
+class DracoStateLegacy(NamedTuple):
+    params: Any  # leaves (N, ...)
+    pending: Any  # accumulated untransmitted local updates (N, ...)
+    buffer: Any  # in-flight weighted deltas (D, N, ...)
+    accept_count: jax.Array  # (N,) messages accepted this period
+    total_accept: jax.Array  # (N,) messages accepted over the whole run
+    window_idx: jax.Array  # scalar int32
+    key: jax.Array
+    positions: jax.Array  # (N, 2) node coordinates (channel model)
+
+
+def init_state_legacy(key, cfg: DracoConfig, params0) -> DracoStateLegacy:
+    """Seed layout: per-leaf pytree buffers of already-mixed deltas."""
+    n, d = cfg.num_clients, cfg.max_delay_windows
+    kp, ks = jax.random.split(key)
+    params = jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (n,) + p.shape).copy(), params0
+    )
+    pending = jax.tree_util.tree_map(jnp.zeros_like, params)
+    buffer = jax.tree_util.tree_map(
+        lambda p: jnp.zeros((d,) + p.shape, p.dtype), params
+    )
+    pos = channel_lib.place_nodes(kp, n, cfg.channel or ChannelConfig())
+    return DracoStateLegacy(
+        params=params,
+        pending=pending,
+        buffer=buffer,
+        accept_count=jnp.zeros((n,), jnp.int32),
+        total_accept=jnp.zeros((n,), jnp.int32),
+        window_idx=jnp.zeros((), jnp.int32),
+        key=ks,
+        positions=pos,
+    )
+
+
+def draco_window_legacy(state: DracoStateLegacy, cfg: DracoConfig, q, adj,
+                        loss_fn, data) -> DracoStateLegacy:
+    """Seed window: D-1 per-bucket full-pytree einsums at enqueue time.
+
+    Deliberately self-contained (no code shared with `draco_window`
+    beyond `local_updates`/`_psi_accept`, which predate the fusion), so
+    the parity suite compares two independent implementations rather
+    than one refactor of the other."""
+    n, D = cfg.num_clients, cfg.max_delay_windows
+    keys = jax.random.split(state.key, 8)
     k_next, k_grad, k_gsel, k_tx, k_chan, k_psi, k_hub, _ = keys
     widx = state.window_idx
 
@@ -163,7 +362,9 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data):
     delta = local_updates(k_gsel, params, grad_mask, cfg, loss_fn, data)
     pending = jax.tree_util.tree_map(lambda a, b: a + b, state.pending, delta)
     if cfg.apply_self_update:
-        params = jax.tree_util.tree_map(lambda p, dl: p + dl.astype(p.dtype), params, delta)
+        params = jax.tree_util.tree_map(
+            lambda p, dl: p + dl.astype(p.dtype), params, delta
+        )
 
     # --- 3. transmission events + channel ----------------------------------
     tx_mask = sample_event_masks(k_tx, cfg.lambda_tx, cfg.window, n)
@@ -178,7 +379,8 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data):
         success = adj & tx_mask[:, None]
         delay_w = jnp.ones((n, n), jnp.int32)
 
-    accept, accept_count = _psi_accept(k_psi, success, state.accept_count, cfg.psi)
+    accept, accept_count = _psi_accept(k_psi, success, state.accept_count,
+                                       cfg.psi)
     # cumulative counter survives the periodic accept_count reset below
     total_accept = state.total_accept + (accept_count - state.accept_count)
     w_eff = q * accept.astype(q.dtype)  # (sender, receiver)
@@ -214,7 +416,7 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data):
             do_unify, unify, lambda a: a, (params, accept_count)
         )
 
-    return DracoState(
+    return DracoStateLegacy(
         params=params,
         pending=pending,
         buffer=buffer,
@@ -227,20 +429,10 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data):
 
 
 @partial(jax.jit, static_argnames=("cfg", "loss_fn", "num_windows"))
-def run_windows(state, cfg: DracoConfig, q, adj, loss_fn, data, num_windows: int):
+def run_windows_legacy(state, cfg: DracoConfig, q, adj, loss_fn, data,
+                       num_windows: int):
     def step(s, _):
-        return draco_window(s, cfg, q, adj, loss_fn, data), None
+        return draco_window_legacy(s, cfg, q, adj, loss_fn, data), None
 
     state, _ = jax.lax.scan(step, state, None, length=num_windows)
     return state
-
-
-def build_graph(cfg: DracoConfig, key=None):
-    adj = adjacency(cfg.topology, cfg.num_clients, key=key)
-    q = row_stochastic(adj)
-    return q, adj
-
-
-def virtual_global_model(params):
-    """x_bar = E_i[x^(i)] (Sec. 2.1) — evaluation-only."""
-    return jax.tree_util.tree_map(lambda p: p.mean(axis=0), params)

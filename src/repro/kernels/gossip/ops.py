@@ -1,4 +1,14 @@
-"""jit'd public wrapper for the gossip mixing kernel (padding + fallback)."""
+"""jit'd public wrappers for the gossip kernels (padding, backend select).
+
+Backend auto-selection (one policy for every wrapper):
+
+  - ``use_kernel=None``  -> Pallas only on TPU; pure-XLA lowering elsewhere
+    (the kernel path in ``interpret`` mode is a correctness tool, far too
+    slow for CPU CI hot loops).
+  - ``interpret=None``   -> interpret mode exactly when not on TPU, so
+    explicitly requesting the kernel path off-TPU still works (tests),
+    while on TPU the compiled kernel is actually exercised.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,8 +16,22 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gossip.gossip import gossip_mix_pallas
-from repro.kernels.gossip.ref import gossip_mix_ref
+from repro.kernels.gossip.gossip import (
+    gossip_drain_pallas,
+    gossip_enqueue_pallas,
+    gossip_mix_pallas,
+)
+from repro.kernels.gossip.ref import gossip_enqueue_ref, gossip_mix_ref
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode iff there is no TPU to compile for."""
+    return jax.default_backend() != "tpu"
+
+
+def default_use_kernel() -> bool:
+    """Use the Pallas kernels only where they compile natively."""
+    return jax.default_backend() == "tpu"
 
 
 def _pad_to(x, mult, axis):
@@ -21,8 +45,10 @@ def _pad_to(x, mult, axis):
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def gossip_mix(q, deltas, *, block_d: int = 512, interpret: bool = False):
+def gossip_mix(q, deltas, *, block_d: int = 512, interpret=None):
     """out = Q^T deltas with TPU-friendly padding. q (N,N), deltas (N,D)."""
+    if interpret is None:
+        interpret = default_interpret()
     n, d = deltas.shape
     qp = _pad_to(_pad_to(q.astype(jnp.float32), 8, 0), 8, 1)
     dp = _pad_to(_pad_to(deltas, 8, 0), block_d, 1)
@@ -32,3 +58,79 @@ def gossip_mix(q, deltas, *, block_d: int = 512, interpret: bool = False):
 
 def gossip_mix_reference(q, deltas):
     return gossip_mix_ref(q, deltas)
+
+
+def gossip_enqueue(w_stack, pending, *, block_d: int = 512, use_kernel=None,
+                   interpret=None, out_dtype=None):
+    """Batched delay-bucketed mixing: ``out[j] = w_stack[j]^T @ pending``.
+
+    This is the *eager* lowering of bucketed gossip — mix one broadcast
+    into all J delay buckets at send time.  The production DRACO engine
+    instead stores raw payloads and defers mixing to `gossip_drain`;
+    `gossip_enqueue` is kept as the eager building block (and as the
+    oracle structure the drain parity tests lean on) for protocols that
+    want mixed-delta rings.
+
+    w_stack (J, N, N): per-delay-bucket masked weights (Q ⊙ M_d) for all
+    buckets j at once; pending (N, K) flat updates.  Returns (J, N, K).
+    On TPU this is one Pallas grid pass reading each pending tile from
+    HBM exactly once (stacked weights resident in VMEM); elsewhere a
+    batched einsum.  f32 accumulation regardless of input dtype;
+    ``out_dtype`` defaults to ``pending.dtype``.
+    """
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+    if not use_kernel:
+        return gossip_enqueue_ref(w_stack, pending, out_dtype=out_dtype)
+    if interpret is None:
+        interpret = default_interpret()
+    j, n, _ = w_stack.shape
+    _, k = pending.shape
+    wp = _pad_to(_pad_to(w_stack.astype(jnp.float32), 8, 1), 8, 2)
+    pp = _pad_to(_pad_to(pending, 8, 0), block_d, 1)
+    out = gossip_enqueue_pallas(
+        wp, pp, block_d=block_d, interpret=interpret,
+        out_dtype=pending.dtype if out_dtype is None else out_dtype)
+    return out[:, :n, :k]
+
+
+def gossip_drain(w_stack, ring, slots, *, block_d: int = 512, use_kernel=None,
+                 interpret=None):
+    """Fused delay-bucketed drain: ``sum_j w_stack[j]^T @ ring[slots[j]]``.
+
+    w_stack (J, N, N): masked weights per stored broadcast, stacked
+    oldest-first; ring (S, N, K): the payload ring buffer; slots (J,):
+    ring rows aligned with ``w_stack`` (oldest first).  Returns the f32
+    (N, K) aggregate of everything arriving this window.
+
+    The f32 accumulation runs in chronological order, so the result is
+    bit-for-bit what the seed ring buffer would have accumulated slot by
+    slot.  The XLA fallback unrolls one small GEMM per stored broadcast
+    and wraps each in ``lax.cond`` keyed on "does this bucket carry any
+    edge at all" — empty delay buckets (the common case when the delay
+    distribution does not fill the ring) cost neither FLOPs nor memory
+    traffic, which is what makes deep ``D`` nearly free.  Skipping is
+    exact: an all-zero weight bucket contributes an exact ±0 matrix.
+    """
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+    n, k = ring.shape[1], ring.shape[2]
+    j_total = w_stack.shape[0]
+    if use_kernel:
+        if interpret is None:
+            interpret = default_interpret()
+        payloads = ring[slots]  # (J, N, K) HBM gather, chronological order
+        wp = _pad_to(_pad_to(w_stack.astype(jnp.float32), 8, 1), 8, 2)
+        pp = _pad_to(_pad_to(payloads, 8, 1), block_d, 2)
+        out = gossip_drain_pallas(wp, pp, block_d=block_d, interpret=interpret)
+        return out[:n, :k]
+    out = jnp.zeros((n, k), jnp.float32)
+    for j in range(j_total):
+        w_j = w_stack[j].astype(jnp.float32)
+
+        def _acc(o, w_j=w_j, j=j):
+            p = jax.lax.dynamic_index_in_dim(ring, slots[j], 0, keepdims=False)
+            return o + jax.lax.dot(w_j.T, p.astype(jnp.float32))
+
+        out = jax.lax.cond(jnp.any(w_j != 0), _acc, lambda o: o, out)
+    return out

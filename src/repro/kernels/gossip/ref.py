@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the gossip mixing kernel."""
+"""Pure-jnp oracles for the gossip kernels."""
 import jax.numpy as jnp
 
 
@@ -12,3 +12,27 @@ def gossip_mix_ref(q, deltas):
         "nm,nd->md", q.astype(jnp.float32), deltas.astype(jnp.float32)
     )
     return out.astype(deltas.dtype)
+
+
+def gossip_enqueue_ref(w_stack, pending, out_dtype=None):
+    """Batched delay-bucketed mix: out[j] = w_stack[j]^T @ pending.
+
+    w_stack: (J, N, N) per-bucket masked weights (Q ⊙ M_d), pending:
+    (N, K).  f32 accumulation; output dtype defaults to pending.dtype.
+    """
+    out = jnp.einsum(
+        "jnm,nk->jmk", w_stack.astype(jnp.float32), pending.astype(jnp.float32)
+    )
+    return out.astype(pending.dtype if out_dtype is None else out_dtype)
+
+
+def gossip_drain_ref(w_stack, payloads, out_dtype=jnp.float32):
+    """Fused multi-window drain: out = sum_j w_stack[j]^T @ payloads[j].
+
+    w_stack: (J, N, N), payloads: (J, N, K), stacked oldest-first.
+    f32 accumulation.
+    """
+    out = jnp.einsum(
+        "jnm,jnk->mk", w_stack.astype(jnp.float32), payloads.astype(jnp.float32)
+    )
+    return out.astype(out_dtype)

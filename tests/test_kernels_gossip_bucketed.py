@@ -1,0 +1,143 @@
+"""Batched delay-bucketed gossip kernels (enqueue/drain) vs oracles.
+
+Edge cases the fused engine depends on: client counts off the 8-sublane
+grid, block_d padding remainders, bf16 payloads with f32 accumulation,
+empty-bucket skipping, and parity with the batched-einsum reference
+across ring depths D in {2, 4, 8}.  (Kept hypothesis-free so the suite
+runs even where tests/test_kernels_gossip.py is skipped.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.gossip.ops import gossip_drain, gossip_enqueue
+from repro.kernels.gossip.ref import (
+    gossip_drain_ref,
+    gossip_enqueue_ref,
+    gossip_mix_ref,
+)
+
+
+def _bucketed_weights(key, n, num_buckets):
+    """(J, N, N) masked weights: a row-stochastic Q split by a random
+    per-link delay bucket (the DRACO enqueue structure: each edge lands
+    in exactly one bucket)."""
+    kq, kd = jax.random.split(key)
+    q = jax.nn.softmax(jax.random.normal(kq, (n, n)), axis=1)
+    delay = jax.random.randint(kd, (n, n), 1, num_buckets + 1)
+    buckets = jnp.arange(1, num_buckets + 1)
+    return q[None] * (delay[None] == buckets[:, None, None]).astype(jnp.float32)
+
+
+@pytest.mark.parametrize("D", [2, 4, 8])
+def test_enqueue_kernel_matches_batched_einsum(D):
+    """Pallas enqueue == the batched-einsum reference across ring depths."""
+    n, k = 16, 256
+    key = jax.random.PRNGKey(D)
+    w_stack = _bucketed_weights(key, n, D - 1)
+    pending = jax.random.normal(jax.random.fold_in(key, 1), (n, k))
+    out = gossip_enqueue(w_stack, pending, use_kernel=True, interpret=True,
+                         block_d=128)
+    ref = gossip_enqueue_ref(w_stack, pending)
+    assert out.shape == (D - 1, n, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_enqueue_n_not_multiple_of_8():
+    """Client counts off the sublane grid (25, 7) round-trip through the
+    zero-padding without polluting real rows."""
+    for n in (25, 7):
+        key = jax.random.PRNGKey(n)
+        w_stack = _bucketed_weights(key, n, 3)
+        pending = jax.random.normal(jax.random.fold_in(key, 1), (n, 192))
+        out = gossip_enqueue(w_stack, pending, use_kernel=True, interpret=True,
+                             block_d=64)
+        ref = gossip_enqueue_ref(w_stack, pending)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_enqueue_block_d_padding_remainder():
+    """K that leaves a block_d remainder (513 % 128 != 0) is padded and
+    sliced back exactly."""
+    n, k = 8, 513
+    key = jax.random.PRNGKey(0)
+    w_stack = _bucketed_weights(key, n, 3)
+    pending = jax.random.normal(jax.random.fold_in(key, 1), (n, k))
+    out = gossip_enqueue(w_stack, pending, use_kernel=True, interpret=True,
+                         block_d=128)
+    assert out.shape == (3, n, k)
+    ref = gossip_enqueue_ref(w_stack, pending)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_enqueue_bf16_deltas_f32_accumulation():
+    """bf16 payloads accumulate in f32 inside the kernel; requesting an
+    f32 output must match the f32-accumulated reference to f32-rounding
+    precision (not bf16 precision)."""
+    n, k = 16, 256
+    key = jax.random.PRNGKey(3)
+    w_stack = _bucketed_weights(key, n, 3)
+    pending = jax.random.normal(jax.random.fold_in(key, 1), (n, k)).astype(
+        jnp.bfloat16)
+    out = gossip_enqueue(w_stack, pending, use_kernel=True, interpret=True,
+                         block_d=128, out_dtype=jnp.float32)
+    assert out.dtype == jnp.float32
+    ref = gossip_enqueue_ref(w_stack, pending, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-6, rtol=1e-6)
+    # default output dtype follows the payload dtype
+    out_bf = gossip_enqueue(w_stack, pending, use_kernel=True, interpret=True,
+                            block_d=128)
+    assert out_bf.dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("D", [2, 4, 8])
+def test_drain_kernel_matches_reference(D):
+    """Pallas fused drain == einsum oracle, via ring + chronological slots."""
+    n, k, S = 12, 200, D
+    key = jax.random.PRNGKey(20 + D)
+    w_stack = _bucketed_weights(key, n, D - 1)
+    ring = jax.random.normal(jax.random.fold_in(key, 1), (S, n, k))
+    slots = jnp.arange(D - 1, dtype=jnp.int32)
+    out = gossip_drain(w_stack, ring, slots, use_kernel=True, interpret=True,
+                       block_d=64)
+    ref = gossip_drain_ref(w_stack, ring[slots])
+    assert out.shape == (n, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_drain_fallback_matches_reference_and_skips_empty_buckets():
+    """The XLA fallback (unrolled GEMMs + lax.cond bucket skipping) equals
+    the oracle, including when some buckets carry no edges at all."""
+    n, k, J = 9, 130, 5
+    key = jax.random.PRNGKey(7)
+    w_stack = _bucketed_weights(key, n, J)
+    w_stack = w_stack.at[1].set(0.0).at[3].set(0.0)  # empty buckets
+    ring = jax.random.normal(jax.random.fold_in(key, 1), (J + 2, n, k))
+    slots = jnp.asarray([6, 2, 5, 0, 3], jnp.int32)
+    out = gossip_drain(w_stack, ring, slots, use_kernel=False)
+    ref = gossip_drain_ref(w_stack, ring[slots])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    # all-empty drain is exactly zero
+    zero = gossip_drain(jnp.zeros_like(w_stack), ring, slots, use_kernel=False)
+    assert not np.asarray(zero).any()
+
+
+def test_enqueue_buckets_sum_to_full_mix():
+    """Buckets partition the edge set, so summing the bucketed outputs
+    recovers the unbucketed gossip mix (linearity of the engine)."""
+    n, k = 10, 96
+    key = jax.random.PRNGKey(42)
+    w_stack = _bucketed_weights(key, n, 4)
+    pending = jax.random.normal(jax.random.fold_in(key, 1), (n, k))
+    out = gossip_enqueue(w_stack, pending, use_kernel=True, interpret=True,
+                         block_d=32)
+    full = gossip_mix_ref(w_stack.sum(0), pending)
+    np.testing.assert_allclose(np.asarray(out.sum(0)), np.asarray(full),
+                               atol=1e-4, rtol=1e-4)
