@@ -1,0 +1,112 @@
+"""Dynamic-scenario sweeps: accuracy/consensus vs churn and stragglers.
+
+Two Fig.-4-style sweeps over the scenario engine, DRACO on the EMNIST-
+like task with the paper wireless channel:
+
+  - **churn sweep** — `markov-edge-flip` at increasing per-step edge
+    flip rates (churn=0 is the frozen graph, the delayed-update analysis
+    regime where link-staleness *distribution* drives convergence);
+  - **straggler sweep** — `straggler-profile` at increasing straggler
+    fractions (10x heavy-tailed slowdowns, 50% duty cycles), probing the
+    paper's "manageable instructions for stragglers" claim under the
+    decoupled computation schedule.
+
+Each point is ONE fused `repro.api.simulate` call with in-jit accuracy +
+consensus sampling. Writes `results/fig_dynamic_{task}.json` and mirrors
+final-point scalars to `BENCH_scenarios.json` (uploaded as a CI artifact
+next to `BENCH_gossip.json`, so the scenario-robustness trajectory is
+tracked across PRs).
+
+  PYTHONPATH=src python -m benchmarks.fig_dynamic --task emnist
+  PYTHONPATH=src python -m benchmarks.fig_dynamic --quick   # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from benchmarks.fig3_convergence import setup
+from repro.api import make_context, simulate
+
+CHURNS = (0.0, 0.05, 0.2, 0.5)
+FRACS = (0.0, 0.2, 0.5)
+
+
+def _one_run(salt, cfg, params0, loss, train, test, acc, key, windows,
+             segments, scenario, scenario_kwargs):
+    ctx = make_context(cfg, loss, train, params0=params0, scenario=scenario,
+                       scenario_key=jax.random.fold_in(key, salt),
+                       scenario_kwargs=scenario_kwargs)
+    seg_w = max(1, windows // segments)
+    st, trace = simulate("draco", cfg, params0, loss, train,
+                         num_steps=segments * seg_w, key=key,
+                         eval_every=seg_w, eval_fn=acc, eval_data=test,
+                         ctx=ctx)
+    accs = [float(a) for a in trace.metrics["accuracy"]]
+    cons = [float(c) for c in trace.metrics["consensus"]]
+    return {
+        "final_acc": accs[-1],
+        "best_acc": max(accs),
+        "final_consensus": cons[-1],
+        "acc_curve": accs,
+        "consensus_curve": cons,
+        "msgs": int(st.total_accept.sum()),
+    }
+
+
+def run(task_name="emnist", windows=240, segments=6, seed=0, num_clients=None,
+        churns=CHURNS, fracs=FRACS, sched_steps=32, out_dir="results",
+        bench_json="BENCH_scenarios.json", quick=False):
+    if quick:
+        windows, segments, num_clients = 60, 3, num_clients or 8
+        churns, fracs, sched_steps = (0.0, 0.2), (0.0, 0.5), 12
+    cfg, train, test, params0, loss, acc, key = setup(task_name, seed,
+                                                      num_clients)
+    results = {"churn": {}, "straggler": {}}
+    for i, churn in enumerate(churns):
+        results["churn"][float(churn)] = _one_run(
+            i, cfg, params0, loss, train, test, acc, key,
+            windows, segments, "markov-edge-flip",
+            {"steps": sched_steps, "churn": float(churn)})
+    for i, frac in enumerate(fracs):
+        results["straggler"][float(frac)] = _one_run(
+            100 + i, cfg, params0, loss, train, test, acc, key,
+            windows, segments, "straggler-profile",
+            {"steps": sched_steps, "straggler_frac": float(frac),
+             "slowdown": 10.0, "duty": 0.5})
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"fig_dynamic_{task_name}.json")
+    with open(path, "w") as f:
+        json.dump({"task": task_name, "windows": windows,
+                   "results": results}, f, indent=1)
+    print(f"# Fig-dynamic scenario sweeps ({task_name}) -> {path}")
+    print("sweep,knob,final_acc,best_acc,final_consensus,msgs")
+    bench = {}
+    for sweep, rows in results.items():
+        for knob, r in rows.items():
+            print(f"{sweep},{knob},{r['final_acc']:.4f},{r['best_acc']:.4f},"
+                  f"{r['final_consensus']:.4f},{r['msgs']}")
+            tag = f"scenario_{sweep}_{knob}"
+            bench[f"{tag}_final_acc"] = r["final_acc"]
+            bench[f"{tag}_final_consensus"] = r["final_consensus"]
+    if bench_json:
+        with open(bench_json, "w") as f:
+            json.dump(bench, f, indent=1, sort_keys=True)
+        print(f"# wrote {bench_json} ({len(bench)} entries)")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="emnist")
+    ap.add_argument("--windows", type=int, default=240)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--clients", type=int, default=None)
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(a.task, windows=a.windows, seed=a.seed, num_clients=a.clients,
+        quick=a.quick)

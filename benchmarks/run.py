@@ -169,6 +169,21 @@ def bench_fig4(quick=False):
     emit("fig4_best_psi", 0.0, f"psi={best_psi}_acc={res[best_psi]['final_acc']:.3f}")
 
 
+def bench_fig_dynamic(quick=False):
+    """Scenario engine: accuracy/consensus vs topology churn and
+    straggler fraction (writes BENCH_scenarios.json for the CI artifact)."""
+    from benchmarks.fig_dynamic import run
+
+    res = run("emnist", quick=quick)
+    frozen = res["churn"][0.0]["final_acc"]
+    worst_churn = min(r["final_acc"] for r in res["churn"].values())
+    worst_strag = min(r["final_acc"] for r in res["straggler"].values())
+    emit("fig_dynamic_churn_robustness", 0.0,
+         f"frozen={frozen:.3f}_worstchurn={worst_churn:.3f}")
+    emit("fig_dynamic_straggler_robustness", 0.0,
+         f"worstfrac={worst_strag:.3f}")
+
+
 def bench_decode(quick=False):
     """Serving-layer: single-token decode latency, reduced dense arch."""
     from repro.configs.base import get_reduced
@@ -193,6 +208,7 @@ BENCHES = {
     "simulate_fused": bench_simulate_fused,
     "fig3": bench_fig3,
     "fig4": bench_fig4,
+    "fig_dynamic": bench_fig_dynamic,
     "decode": bench_decode,
 }
 

@@ -1,0 +1,72 @@
+"""Dynamic scenarios: DRACO on time-varying networks, via `repro.api`.
+
+Runs the same DRACO protocol under all four registered scenario
+generators — the frozen graph, Markov edge churn, random-waypoint
+mobility (graph re-derived from channel geometry each epoch), and a
+heavy-tailed straggler profile — and prints a side-by-side table of
+accuracy and consensus distance. Each run is ONE compiled `simulate`
+scan; the scenario's schedule rings are indexed in-jit at every window,
+so a time-varying topology costs the same dispatch as a frozen one.
+
+  PYTHONPATH=src python examples/dynamic_topology.py
+"""
+import jax
+
+from repro.api import simulate
+from repro.configs.draco_paper import EMNIST
+from repro.core.channel import ChannelConfig
+from repro.core.protocol import DracoConfig
+from repro.data.synthetic import federated_classification, make_mlp
+from repro.scenarios import list_scenarios
+
+SCENARIOS = {
+    "static": {},
+    "markov-edge-flip": {"steps": 32, "churn": 0.2},
+    "random-waypoint": {"steps": 32, "speed": 40.0},
+    "straggler-profile": {"steps": 32, "straggler_frac": 0.4,
+                          "slowdown": 10.0, "duty": 0.5},
+}
+
+# psi must track in-degree (fig3 makes the same move on complete
+# graphs): the cycle-based scenarios have 2 in-neighbors, but
+# random-waypoint's geometric graph links ~half the disk — a tiny fixed
+# cap starves it (accuracy collapses to near-local-only), so the cap is
+# lifted entirely there (psi=0 = unbounded; sweep psi to see the cliff).
+PSI = {"random-waypoint": 0}
+
+
+def main():
+    t = EMNIST
+    n, windows = 16, 300
+    key = jax.random.PRNGKey(0)
+    k_data, k_model, k_sim, k_sched = jax.random.split(key, 4)
+
+    print(f"== DRACO under dynamic scenarios: {n} clients, {windows} windows ==")
+    print(f"registered scenarios: {', '.join(list_scenarios())}")
+    train, test = federated_classification(
+        k_data, n, input_dim=t.input_dim, num_classes=t.num_classes,
+        per_client=t.samples_per_client)
+    params0, apply, loss, acc = make_mlp(k_model, t.input_dim, t.hidden,
+                                         t.num_classes)
+    cfg = DracoConfig(
+        num_clients=n, lr=t.lr, local_batches=t.local_batches,
+        batch_size=t.batch_size, lambda_grad=0.3, lambda_tx=0.3,
+        unify_period=50, psi=6, topology="cycle", max_delay_windows=4,
+        channel=ChannelConfig(message_bytes=t.message_bytes, gamma_max=10.0))
+
+    print(f"{'scenario':<20} {'final acc':>9} {'consensus':>9} {'msgs':>7}")
+    for name, knobs in SCENARIOS.items():
+        cfg_s = cfg.replace(psi=PSI.get(name, cfg.psi))
+        st, trace = simulate("draco", cfg_s, params0, loss, train,
+                             num_steps=windows, key=k_sim, eval_every=100,
+                             eval_fn=acc, eval_data=test, scenario=name,
+                             scenario_key=k_sched, scenario_kwargs=knobs)
+        a = float(trace.metrics["accuracy"][-1])
+        c = float(trace.metrics["consensus"][-1])
+        print(f"{name:<20} {a:>9.3f} {c:>9.4f} {int(st.total_accept.sum()):>7}")
+    print("done — one simulator, four workloads: churn, mobility and "
+          "stragglers ride the same compiled scan as the frozen graph.")
+
+
+if __name__ == "__main__":
+    main()

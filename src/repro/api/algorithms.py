@@ -17,10 +17,20 @@ import jax.numpy as jnp
 from repro.api.algorithm import register_algorithm
 from repro.core import baselines as baselines_lib
 from repro.core import protocol as protocol_lib
+from repro.scenarios.base import Snapshot
 
 # Partial-participation probability for the async baselines (the fig3
 # compute-matching assumes this value; it is the legacy default).
 P_ACTIVE = 0.5
+
+
+def _view(ctx, t) -> Snapshot:
+    """The step-`t` world: the scenario schedule's ring lookup when the
+    context carries one, else the frozen t=0 graph (positions/rates None
+    so step functions stay on the frozen path bit-for-bit)."""
+    if ctx.schedule is None:
+        return Snapshot(q=ctx.q, adj=ctx.adj, w_sym=ctx.w_sym)
+    return ctx.schedule.at(t)
 
 
 @register_algorithm("draco")
@@ -32,9 +42,11 @@ class Draco:
         return protocol_lib.init_state(key, cfg, params0)
 
     def step(self, state, ctx):
+        v = _view(ctx, state.window_idx)
         return protocol_lib.draco_window(
-            state, ctx.cfg, ctx.q, ctx.adj, ctx.loss_fn, ctx.data,
-            spec=ctx.flat_spec,
+            state, ctx.cfg, v.q, v.adj, ctx.loss_fn, ctx.data,
+            spec=ctx.flat_spec, positions=v.positions,
+            compute_rate=v.compute_rate, tx_rate=v.tx_rate,
         )
 
     def eval_params(self, state):
@@ -63,8 +75,10 @@ class SyncSymm(_Baseline):
     """Synchronous D-SGD with symmetric Metropolis mixing."""
 
     def step(self, state, ctx):
+        v = _view(ctx, state.round_idx)
         return baselines_lib.sync_symm_round(
-            state, ctx.cfg, ctx.w_sym, ctx.adj, ctx.loss_fn, ctx.data
+            state, ctx.cfg, v.w_sym, v.adj, ctx.loss_fn, ctx.data,
+            positions=v.positions, compute_rate=v.compute_rate,
         )
 
 
@@ -73,8 +87,10 @@ class SyncPush(_Baseline):
     """Synchronous push-sum over the directed graph (gradient push)."""
 
     def step(self, state, ctx):
+        v = _view(ctx, state.round_idx)
         state, _ = baselines_lib.sync_push_round(
-            state, ctx.cfg, ctx.adj, ctx.loss_fn, ctx.data
+            state, ctx.cfg, v.adj, ctx.loss_fn, ctx.data,
+            positions=v.positions, compute_rate=v.compute_rate,
         )
         return state
 
@@ -84,9 +100,11 @@ class AsyncSymm(_Baseline):
     """Async partial participation + symmetric mixing among survivors."""
 
     def step(self, state, ctx):
+        v = _view(ctx, state.round_idx)
         return baselines_lib.async_symm_round(
-            state, ctx.cfg, ctx.w_sym, ctx.adj, ctx.loss_fn, ctx.data,
-            p_active=P_ACTIVE,
+            state, ctx.cfg, v.w_sym, v.adj, ctx.loss_fn, ctx.data,
+            p_active=P_ACTIVE, positions=v.positions,
+            compute_rate=v.compute_rate,
         )
 
     def grads_per_step(self, cfg):
@@ -98,9 +116,11 @@ class AsyncPush(_Baseline):
     """Async push-sum gossip (Digest-style half-mass pushes)."""
 
     def step(self, state, ctx):
+        v = _view(ctx, state.round_idx)
         state, _ = baselines_lib.async_push_round(
-            state, ctx.cfg, ctx.adj, ctx.loss_fn, ctx.data,
-            p_active=P_ACTIVE,
+            state, ctx.cfg, v.adj, ctx.loss_fn, ctx.data,
+            p_active=P_ACTIVE, positions=v.positions,
+            compute_rate=v.compute_rate,
         )
         return state
 

@@ -4,16 +4,19 @@ Bundles everything a protocol step needs besides its own state — the
 gossip graph (boolean adjacency, row-stochastic Q, symmetric Metropolis
 weights), the loss, the federated data shards, the flat-plane layout
 (`FlatSpec`: per-leaf shapes/offsets into the contiguous (N, Dflat)
-buffer, computed once per run) and optional node positions — so
-graph/channel construction happens **once** per run instead of once per
-method (the legacy `run_baseline` rebuilt the graph inside every jit).
+buffer, computed once per run), optional node positions, and an optional
+scenario `schedule` (`repro.scenarios.Schedule`: precomputed rings of
+time-varying `(q_t, adj_t, positions_t, compute_rate_t)`, indexed by
+``step % period`` inside the jitted scan) — so graph/channel/schedule
+construction happens **once** per run instead of once per method (the
+legacy `run_baseline` rebuilt the graph inside every jit).
 
 `SimContext` is registered as a pytree: `(q, adj, w_sym, data,
-positions)` are traced children, while `(cfg, loss_fn, flat_spec)` ride
-as static aux data. Passing a context through `jax.jit` therefore
-recompiles only when the config, loss function or parameter layout
-changes, exactly like the legacy `static_argnames=("cfg", "loss_fn")`
-entry points.
+positions, schedule)` are traced children, while `(cfg, loss_fn,
+flat_spec)` ride as static aux data. Passing a context through
+`jax.jit` therefore recompiles only when the config, loss function,
+parameter layout or schedule *structure* changes, exactly like the
+legacy `static_argnames=("cfg", "loss_fn")` entry points.
 """
 from __future__ import annotations
 
@@ -31,13 +34,13 @@ from repro.core.topology import metropolis
 @jax.tree_util.register_pytree_node_class
 class SimContext:
     """Immutable bundle of (cfg, loss_fn, q, adj, w_sym, data, positions,
-    flat_spec)."""
+    flat_spec, schedule)."""
 
     __slots__ = ("cfg", "loss_fn", "q", "adj", "w_sym", "data", "positions",
-                 "flat_spec")
+                 "flat_spec", "schedule")
 
     def __init__(self, cfg, loss_fn, q, adj, w_sym, data, positions=None,
-                 flat_spec=None):
+                 flat_spec=None, schedule=None):
         object.__setattr__(self, "cfg", cfg)
         object.__setattr__(self, "loss_fn", loss_fn)
         object.__setattr__(self, "q", q)
@@ -46,6 +49,7 @@ class SimContext:
         object.__setattr__(self, "data", data)
         object.__setattr__(self, "positions", positions)
         object.__setattr__(self, "flat_spec", flat_spec)
+        object.__setattr__(self, "schedule", schedule)
 
     def __setattr__(self, name, value):
         raise AttributeError("SimContext is immutable")
@@ -56,25 +60,32 @@ class SimContext:
         return SimContext(**fields)
 
     def tree_flatten(self):
-        children = (self.q, self.adj, self.w_sym, self.data, self.positions)
+        children = (self.q, self.adj, self.w_sym, self.data, self.positions,
+                    self.schedule)
         aux = (self.cfg, self.loss_fn, self.flat_spec)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         cfg, loss_fn, flat_spec = aux
-        q, adj, w_sym, data, positions = children
-        return cls(cfg, loss_fn, q, adj, w_sym, data, positions, flat_spec)
+        q, adj, w_sym, data, positions, schedule = children
+        return cls(cfg, loss_fn, q, adj, w_sym, data, positions, flat_spec,
+                   schedule)
 
     def __repr__(self):
         n = self.q.shape[0] if self.q is not None else "?"
+        sched = ""
+        if self.schedule is not None:
+            sched = f", schedule_period={self.schedule.period}"
         return (f"SimContext(n={n}, topology={getattr(self.cfg, 'topology', '?')}, "
-                f"loss_fn={getattr(self.loss_fn, '__name__', self.loss_fn)!r})")
+                f"loss_fn={getattr(self.loss_fn, '__name__', self.loss_fn)!r}"
+                f"{sched})")
 
 
 def make_context(cfg, loss_fn: Optional[Callable] = None, data: Any = None, *,
-                 params0: Any = None, graph_key=None,
-                 place_key=None) -> SimContext:
+                 params0: Any = None, graph_key=None, place_key=None,
+                 scenario=None, scenario_key=None,
+                 scenario_kwargs=None) -> SimContext:
     """Build a `SimContext` from a `DracoConfig`-style config.
 
     Constructs the adjacency once and derives both weight matrices from
@@ -85,9 +96,36 @@ def make_context(cfg, loss_fn: Optional[Callable] = None, data: Any = None, *,
     `place_key`, when given, additionally samples node positions for
     the wireless channel model (methods that carry positions in their
     own state may ignore it).
+
+    `scenario` (a `repro.scenarios` generator name or a prebuilt
+    `Schedule`) attaches time-varying rings: the context's `q`/`adj`/
+    `w_sym` become the schedule's step-0 snapshot and step functions
+    read step-`t` graphs/rates via `ctx.schedule.at(t)`. `scenario_key`
+    seeds the generator (defaults to `graph_key`, so a "static" scenario
+    reproduces the frozen graph bit-for-bit); `scenario_kwargs` are the
+    generator's knobs (churn rate, mobility speed, straggler fraction,
+    ...).
     """
-    q, adj = build_graph(cfg, key=graph_key)
-    w_sym = metropolis(adj)
+    schedule = None
+    if scenario is None:
+        if scenario_key is not None or scenario_kwargs:
+            # a forgotten scenario= would otherwise run the frozen graph
+            # and silently produce frozen-graph numbers for a churn sweep
+            raise ValueError(
+                "scenario_key/scenario_kwargs given without scenario=")
+        q, adj = build_graph(cfg, key=graph_key)
+        w_sym = metropolis(adj)
+    else:
+        from repro.scenarios import make_schedule
+
+        key = scenario_key if scenario_key is not None else graph_key
+        schedule = make_schedule(scenario, cfg, key=key,
+                                 **(scenario_kwargs or {}))
+        if schedule.num_clients != cfg.num_clients:
+            raise ValueError(
+                f"schedule is for {schedule.num_clients} clients, "
+                f"cfg.num_clients={cfg.num_clients}")
+        q, adj, w_sym = schedule.q[0], schedule.adj[0], schedule.w_sym[0]
     positions = None
     if place_key is not None:
         positions = channel_lib.place_nodes(
@@ -96,4 +134,5 @@ def make_context(cfg, loss_fn: Optional[Callable] = None, data: Any = None, *,
     flat_spec = None
     if params0 is not None:
         flat_spec = flat_lib.spec_for(params0, cfg.num_clients)
-    return SimContext(cfg, loss_fn, q, adj, w_sym, data, positions, flat_spec)
+    return SimContext(cfg, loss_fn, q, adj, w_sym, data, positions, flat_spec,
+                      schedule)

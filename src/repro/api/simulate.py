@@ -12,6 +12,12 @@ loss), then a single device call regardless of how often you sample.
 `steps_for_budget` converts a compute budget (expected local-SGD
 invocations per client) into a step count for any algorithm, expressing
 the paper's compute-matched comparisons in one place.
+
+Time-varying workloads ride the same scan: `simulate(...,
+scenario="random-waypoint")` attaches a `repro.scenarios.Schedule` to
+the context, and the per-step algorithm adapters index its rings by the
+state-carried step counter — no extra scan carry, no recompilation per
+step, and `scenario="static"` is bit-for-bit the frozen-graph path.
 """
 from __future__ import annotations
 
@@ -110,6 +116,9 @@ def simulate(
     ctx: Optional[SimContext] = None,
     state: Any = None,
     graph_key=None,
+    scenario=None,
+    scenario_key=None,
+    scenario_kwargs=None,
 ):
     """Run `num_steps` of any registered algorithm in one compiled call.
 
@@ -128,10 +137,20 @@ def simulate(
       eval_fn: `metric(params_i, ex, ey) -> scalar` (e.g. accuracy);
         vmapped over clients and averaged. Requires `eval_data`.
       eval_data: held-out `(ex, ey)` for `eval_fn`.
-      ctx: prebuilt `SimContext` to share graph/channel construction
-        across runs; built from (cfg, loss_fn, data) when omitted.
+      ctx: prebuilt `SimContext` to share graph/channel/schedule
+        construction across runs; built from (cfg, loss_fn, data) when
+        omitted.
       state: resume from an existing algorithm state.
       graph_key: PRNGKey for random topologies (passed to `make_context`).
+      scenario: `repro.scenarios` generator name (e.g.
+        "markov-edge-flip") or prebuilt `Schedule` — attaches
+        time-varying `(q_t, adj_t, positions_t, compute_rate_t)` rings.
+        The scan itself carries no extra schedule index: each method's
+        state already counts steps (`window_idx`/`round_idx`) and the
+        per-step adapter looks up `schedule.at(step)` in-jit. Only valid
+        when `ctx` is omitted (a prebuilt ctx brings its own schedule).
+      scenario_key / scenario_kwargs: generator seed and knobs
+        (see `make_context`).
 
     Returns:
       (final_state, SimTrace) — the trace holds exactly the sampled
@@ -141,7 +160,13 @@ def simulate(
         algo = get_algorithm(algo)
     if ctx is None:
         ctx = make_context(cfg, loss_fn, data, params0=params0,
-                           graph_key=graph_key)
+                           graph_key=graph_key, scenario=scenario,
+                           scenario_key=scenario_key,
+                           scenario_kwargs=scenario_kwargs)
+    elif scenario is not None:
+        raise ValueError(
+            "pass scenario to make_context when prebuilding ctx; a ctx "
+            "already carries its schedule")
     elif ctx.cfg != cfg:
         # steps read ctx.cfg, init reads cfg — a silent mismatch would run
         # the wrong config; rebind with ctx.replace(cfg=...) to share the

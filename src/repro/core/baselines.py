@@ -57,14 +57,48 @@ def init_baseline_state(key, cfg: DracoConfig, params0) -> BaselineState:
     )
 
 
-def _link_success(key, state, cfg, adj, tx_mask):
-    """Per-round surviving directed links (i->j) incl. channel drops."""
+def _link_success(key, state, cfg, adj, tx_mask, positions=None):
+    """Per-round surviving directed links (i->j) incl. channel drops.
+
+    `positions`, when given (mobility scenarios), overrides the state-
+    carried node coordinates for this round's channel draws."""
     if cfg.channel is not None and cfg.channel.enabled:
+        pos = state.positions if positions is None else positions
         _, success = channel_lib.transmission_delays(
-            key, state.positions, tx_mask, cfg.channel
+            key, pos, tx_mask, cfg.channel
         )
         return success & adj
     return adj & tx_mask[:, None]
+
+
+def _participation(key, n, p_base, compute_rate):
+    """Per-client participation mask at probability p_base, scaled by a
+    scenario's compute-rate ring (clipped into [0, 1]): stragglers show
+    up less often. compute_rate=None keeps the frozen-path draw."""
+    p = p_base if compute_rate is None else jnp.clip(p_base * compute_rate, 0.0, 1.0)
+    return jax.random.uniform(key, (n,)) < p
+
+
+def _sync_round_keys(state, n, compute_rate):
+    """Key split + compute gate shared by the sync rounds. The split
+    count is gated on `compute_rate is None` so the frozen path keeps
+    its exact legacy RNG stream (the parity suite pins it bit-for-bit);
+    only scenario runs pay the extra participation draw."""
+    if compute_rate is None:
+        k_next, k_g, k_c = jax.random.split(state.key, 3)
+        return k_next, k_g, k_c, jnp.ones((n,), bool)
+    k_next, k_g, k_c, k_s = jax.random.split(state.key, 4)
+    return k_next, k_g, k_c, _participation(k_s, n, 1.0, compute_rate)
+
+
+def _advance(state, *, params, key, push_weight=None, positions=None):
+    """Shared end-of-round state update (positions track mobility)."""
+    kw = dict(params=params, key=key, round_idx=state.round_idx + 1)
+    if push_weight is not None:
+        kw["push_weight"] = push_weight
+    if positions is not None:
+        kw["positions"] = positions
+    return state._replace(**kw)
 
 
 def _mix_rows(w, params):
@@ -74,30 +108,37 @@ def _mix_rows(w, params):
     )
 
 
-def sync_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data):
-    """D-SGD with Metropolis weights; dropped links' mass folds into self."""
+def sync_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data, *,
+                    positions=None, compute_rate=None):
+    """D-SGD with Metropolis weights; dropped links' mass folds into self.
+
+    A scenario compute-rate ring turns into a per-round completion
+    probability: stragglers skip their local update (their stale params
+    still mix) — sync methods *wait* for nobody here, matching DRACO's
+    compute/comms decoupling rather than stalling the round."""
     n = cfg.num_clients
-    k_next, k_g, k_c = jax.random.split(state.key, 3)
     all_on = jnp.ones((n,), bool)
-    delta = local_updates(k_g, state.params, all_on, cfg, loss_fn, data)
+    k_next, k_g, k_c, on = _sync_round_keys(state, n, compute_rate)
+    delta = local_updates(k_g, state.params, on, cfg, loss_fn, data)
     params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
-    succ = _link_success(k_c, state, cfg, adj, all_on)
+    succ = _link_success(k_c, state, cfg, adj, all_on, positions=positions)
     succ = succ & succ.T  # symmetric methods need bidirectional links
     w = jnp.where(succ & ~jnp.eye(n, dtype=bool), w_sym, 0.0)
     # dropped links' weight folds back into the self-loop (keeps w row-stoch.)
     w = jnp.where(jnp.eye(n, dtype=bool), 1.0 - w.sum(axis=1, keepdims=True), w)
     params = _mix_rows(w, params)
-    return state._replace(params=params, key=k_next, round_idx=state.round_idx + 1)
+    return _advance(state, params=params, key=k_next, positions=positions)
 
 
-def sync_push_round(state: BaselineState, cfg, adj, loss_fn, data):
+def sync_push_round(state: BaselineState, cfg, adj, loss_fn, data, *,
+                    positions=None, compute_rate=None):
     """Synchronous push-sum (stochastic gradient push, Assran et al.)."""
     n = cfg.num_clients
-    k_next, k_g, k_c = jax.random.split(state.key, 3)
     all_on = jnp.ones((n,), bool)
-    delta = local_updates(k_g, state.params, all_on, cfg, loss_fn, data)
+    k_next, k_g, k_c, on = _sync_round_keys(state, n, compute_rate)
+    delta = local_updates(k_g, state.params, on, cfg, loss_fn, data)
     params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
-    succ = _link_success(k_c, state, cfg, adj, all_on)
+    succ = _link_success(k_c, state, cfg, adj, all_on, positions=positions)
     # column-stochastic P: sender splits mass over (self + successful out-links)
     out = succ.astype(jnp.float32)
     col = out + jnp.eye(n)
@@ -109,37 +150,41 @@ def sync_push_round(state: BaselineState, cfg, adj, loss_fn, data):
         lambda p: (p.astype(jnp.float32) / w.reshape((n,) + (1,) * (p.ndim - 1))).astype(p.dtype),
         params,
     )
-    return state._replace(params=params, push_weight=w, key=k_next,
-                          round_idx=state.round_idx + 1), de_biased
+    return _advance(state, params=params, key=k_next, push_weight=w,
+                    positions=positions), de_biased
 
 
 def async_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data,
-                     p_active: float = 0.5):
+                     p_active: float = 0.5, *, positions=None,
+                     compute_rate=None):
     """Async decentralized SGD w/ delay deadline [15]: only a random subset
-    is active per round; symmetric mixing among surviving active links."""
+    is active per round; symmetric mixing among surviving active links.
+    A scenario compute-rate ring scales each client's activation
+    probability (stragglers participate less often)."""
     n = cfg.num_clients
     k_next, k_a, k_g, k_c = jax.random.split(state.key, 4)
-    active = jax.random.uniform(k_a, (n,)) < p_active
+    active = _participation(k_a, n, p_active, compute_rate)
     delta = local_updates(k_g, state.params, active, cfg, loss_fn, data)
     params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
-    succ = _link_success(k_c, state, cfg, adj, active)
+    succ = _link_success(k_c, state, cfg, adj, active, positions=positions)
     succ = succ & succ.T & active[:, None] & active[None, :]
     w = jnp.where(succ, w_sym, 0.0)
     w = jnp.where(jnp.eye(n, dtype=bool), 1.0 - w.sum(axis=1), w)
     params = _mix_rows(w, params)
-    return state._replace(params=params, key=k_next, round_idx=state.round_idx + 1)
+    return _advance(state, params=params, key=k_next, positions=positions)
 
 
 def async_push_round(state: BaselineState, cfg, adj, loss_fn, data,
-                     p_active: float = 0.5):
+                     p_active: float = 0.5, *, positions=None,
+                     compute_rate=None):
     """Asynchronous push-sum gossip (Digest-style [50]): active clients
     push half their mass, split across successful out-neighbors."""
     n = cfg.num_clients
     k_next, k_a, k_g, k_c = jax.random.split(state.key, 4)
-    active = jax.random.uniform(k_a, (n,)) < p_active
+    active = _participation(k_a, n, p_active, compute_rate)
     delta = local_updates(k_g, state.params, active, cfg, loss_fn, data)
     params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
-    succ = _link_success(k_c, state, cfg, adj, active)
+    succ = _link_success(k_c, state, cfg, adj, active, positions=positions)
     out = succ.astype(jnp.float32)
     outdeg = out.sum(axis=1, keepdims=True)
     send = jnp.where(outdeg > 0, 0.5 * out / jnp.maximum(outdeg, 1e-9), 0.0)
@@ -151,8 +196,8 @@ def async_push_round(state: BaselineState, cfg, adj, loss_fn, data,
         lambda p: (p.astype(jnp.float32) / w.reshape((n,) + (1,) * (p.ndim - 1))).astype(p.dtype),
         params,
     )
-    return state._replace(params=params, push_weight=w, key=k_next,
-                          round_idx=state.round_idx + 1), de_biased
+    return _advance(state, params=params, key=k_next, push_weight=w,
+                    positions=positions), de_biased
 
 
 BASELINES = ("sync-symm", "sync-push", "async-symm", "async-push")

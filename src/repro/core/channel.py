@@ -53,6 +53,22 @@ def pairwise_dist(pos) -> jax.Array:
     return jnp.maximum(d, 1.0)  # clamp to 1 m (avoid singular path loss)
 
 
+def interference(dist, p_rx, tx_mask, cfg: ChannelConfig) -> jax.Array:
+    """Aggregate interference seen on each link i -> j: total received
+    power at j from concurrently transmitting nodes within the
+    interference radius, minus i's own signal when i is itself close.
+
+    The self-subtraction removes one term of the sum it was part of, so
+    the result is non-negative up to f32 rounding; the clamp absorbs
+    that rounding (tests pin both facts). Returns (n, n), [i, j] =
+    interference on the i -> j link.
+    """
+    close = dist <= cfg.interference_radius_frac * cfg.radius  # [n, j]
+    contrib = jnp.where(close & tx_mask[:, None], p_rx, 0.0)  # [n, j]
+    interf = contrib.sum(axis=0)[None, :] - contrib
+    return jnp.maximum(interf, 0.0)
+
+
 def transmission_delays(key, pos, tx_mask, cfg: ChannelConfig):
     """Sample per-link delay Gamma (n, n) [seconds] and success mask.
 
@@ -65,13 +81,28 @@ def transmission_delays(key, pos, tx_mask, cfg: ChannelConfig):
     h = jax.random.exponential(key, (n, n))  # fading per link
     p_rx = cfg.tx_power_w * h * dist ** (-cfg.path_loss_exp)  # [i,j]: power of i at j
 
-    # interferers of receiver j: transmitting nodes n != i within 0.1R of j
-    close = dist <= cfg.interference_radius_frac * cfg.radius  # [n, j]
-    interf_all = jnp.einsum("nj,n->j", (close & tx_mask[:, None]).astype(jnp.float32) * p_rx.astype(jnp.float32), jnp.ones((n,)))
-    # subtract own signal when i itself is close to j
-    interf = interf_all[None, :] - jnp.where(close & tx_mask[:, None], p_rx, 0.0)
-    sinr = p_rx / (jnp.maximum(interf, 0.0) + cfg.noise_w)
+    sinr = p_rx / (interference(dist, p_rx, tx_mask, cfg) + cfg.noise_w)
     rate = cfg.bandwidth_hz * jnp.log2(1.0 + sinr)
     gamma = (cfg.message_bytes * 8) / jnp.maximum(rate, 1e-9) + dist / LIGHTSPEED
     success = (gamma <= cfg.gamma_max) & tx_mask[:, None]
     return gamma, success
+
+
+def geometric_adjacency(pos, max_range: float) -> jax.Array:
+    """Boolean links from channel geometry: i -> j iff dist(i, j) <=
+    max_range, zero diagonal. The random-waypoint scenario re-derives
+    the gossip graph from this every mobility epoch."""
+    n = pos.shape[0]
+    return (pairwise_dist(pos) <= max_range) & ~jnp.eye(n, dtype=bool)
+
+
+def waypoint_step(pos, waypoints, speed: float):
+    """One random-waypoint hop: move each node `speed` meters toward its
+    target, snapping onto targets within reach. Returns (new_pos (n, 2),
+    arrived (n,) bool); the caller resamples targets for arrived nodes.
+    """
+    d = waypoints - pos
+    dist = jnp.linalg.norm(d, axis=-1, keepdims=True)
+    arrived = dist[..., 0] <= speed
+    step = d / jnp.maximum(dist, 1e-9) * speed
+    return jnp.where(arrived[:, None], waypoints, pos + step), arrived

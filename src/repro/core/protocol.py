@@ -156,16 +156,23 @@ def _psi_accept(key, success, accept_count, psi: int):
     return ok & success, new_count
 
 
-def _tx_and_accept(state, cfg, q, adj, k_tx, k_chan, k_psi):
+def _tx_and_accept(state, cfg, q, adj, k_tx, k_chan, k_psi, positions=None,
+                   tx_rate=None):
     """Transmission events + channel + Psi cap (shared by both engines).
+
+    `positions`/`tx_rate`, when given (scenario schedules), override the
+    state-carried node coordinates and scale the per-client Poisson tx
+    rate; None means the frozen-path behavior, bit-for-bit.
 
     Returns (tx_mask (N,), w_eff (N,N), delay_w (N,N) int32,
     accept_count, total_accept)."""
     n, D = cfg.num_clients, cfg.max_delay_windows
-    tx_mask = sample_event_masks(k_tx, cfg.lambda_tx, cfg.window, n)
+    lam_tx = cfg.lambda_tx if tx_rate is None else cfg.lambda_tx * tx_rate
+    tx_mask = sample_event_masks(k_tx, lam_tx, cfg.window, n)
     if cfg.channel is not None and cfg.channel.enabled:
+        pos = state.positions if positions is None else positions
         gamma, success = channel_lib.transmission_delays(
-            k_chan, state.positions, tx_mask, cfg.channel
+            k_chan, pos, tx_mask, cfg.channel
         )
         delay_w = jnp.ceil(gamma / cfg.window).astype(jnp.int32)  # >= 1 typ.
         delay_w = jnp.clip(delay_w, 1, D - 1)
@@ -197,7 +204,8 @@ def _unify(params, accept_count, widx, cfg, n):
 
 
 def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data,
-                 spec=None):
+                 spec=None, *, positions=None, compute_rate=None,
+                 tx_rate=None):
     """One superposition window on the fused gossip engine.
 
     Bit-for-bit equal to `draco_window_legacy` at f32 (the parity suite
@@ -205,6 +213,15 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data,
     `spec` is the flat-plane layout (`FlatSpec`); pass the one stored on
     `SimContext` to share it across steps, or omit it to derive it from
     `state.params` at trace time.
+
+    The keyword-only trio carries a scenario schedule's step-t snapshot
+    (`repro.scenarios`): `positions` (N, 2) overrides the state-carried
+    node coordinates for this window's channel draws (and is written
+    back to the state, so mobility is visible downstream);
+    `compute_rate`/`tx_rate` (N,) scale the per-client Poisson
+    grad/transmission rates (straggler profiles modulate the decoupled
+    computation schedule without touching the comms schedule). All
+    default to None == the frozen-graph path, bit-for-bit.
     """
     n, D = cfg.num_clients, cfg.max_delay_windows
     keys = jax.random.split(state.key, 8)
@@ -229,7 +246,8 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data,
     )
 
     # --- 2. gradient events ------------------------------------------------
-    grad_mask = sample_event_masks(k_grad, cfg.lambda_grad, cfg.window, n)
+    lam_g = cfg.lambda_grad if compute_rate is None else cfg.lambda_grad * compute_rate
+    grad_mask = sample_event_masks(k_grad, lam_g, cfg.window, n)
     delta = local_updates(k_gsel, params, grad_mask, cfg, loss_fn, data)
     pending = state.pending + flat_lib.ravel_clients(delta)
     if cfg.apply_self_update:
@@ -239,7 +257,8 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data,
 
     # --- 3. transmission events + channel ----------------------------------
     tx_mask, w_eff, delay_w, accept_count, total_accept = _tx_and_accept(
-        state, cfg, q, adj, k_tx, k_chan, k_psi
+        state, cfg, q, adj, k_tx, k_chan, k_psi, positions=positions,
+        tx_rate=tx_rate,
     )
 
     # enqueue: write this window's broadcast (payload + per-link metadata)
@@ -268,7 +287,7 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data,
         total_accept=total_accept,
         window_idx=widx + 1,
         key=k_next,
-        positions=state.positions,
+        positions=state.positions if positions is None else positions,
     )
 
 

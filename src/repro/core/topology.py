@@ -42,9 +42,14 @@ def adjacency(topology: str, n: int, key=None, p: float = 0.3, directed: bool = 
         np.fill_diagonal(a, False)
         if not directed:
             a = a | a.T
-        # ensure weak connectivity via a cycle overlay
+        # connectivity overlay: a directed Hamiltonian cycle makes the
+        # digraph strongly connected; mirror it for undirected graphs so
+        # the adjacency stays symmetric (the one-way overlay used to
+        # leave "undirected" erdos graphs asymmetric)
         for i in range(n):
             a[i, (i + 1) % n] = True
+            if not directed:
+                a[(i + 1) % n, i] = True
     else:
         raise ValueError(topology)
     np.fill_diagonal(a, False)

@@ -1,0 +1,42 @@
+"""`repro.scenarios` — time-varying simulation workloads.
+
+A `Scenario` generator produces a `Schedule` of precomputed rings
+``(q_t, adj_t, positions_t, compute_rate_t, tx_rate_t)`` consumed inside
+the jitted `repro.api.simulate` scan via ``schedule.at(step)``:
+
+    from repro.api import simulate
+    state, trace = simulate("draco", cfg, params0, loss, train, 600,
+                            key=key, scenario="markov-edge-flip",
+                            scenario_kwargs={"churn": 0.2})
+
+Built-ins: ``static`` (frozen graph, bit-for-bit equal to the
+scenario-less path), ``markov-edge-flip`` (per-edge on/off Markov
+chains), ``random-waypoint`` (mobility + geometry-derived graphs),
+``straggler-profile`` (heavy-tailed duty-cycled compute rates). New
+generators register with `@register_scenario("name")`.
+"""
+from repro.scenarios.base import (
+    Schedule,
+    Snapshot,
+    check_snapshot,
+    get_scenario,
+    list_scenarios,
+    make_schedule,
+    register_scenario,
+    validate_schedule,
+)
+
+# importing the module registers the built-in generators
+from repro.scenarios import generators  # noqa: F401
+
+__all__ = [
+    "Schedule",
+    "Snapshot",
+    "check_snapshot",
+    "generators",
+    "get_scenario",
+    "list_scenarios",
+    "make_schedule",
+    "register_scenario",
+    "validate_schedule",
+]

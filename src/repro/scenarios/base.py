@@ -1,0 +1,173 @@
+"""The `Scenario` abstraction: time-varying simulation workloads.
+
+DRACO's claim is stable convergence on *directed, row-stochastic,
+asynchronous* networks — but a frozen graph sampled at t=0 only probes
+the easiest point of that regime. A scenario turns the simulator into a
+workload generator: it produces a (possibly time-varying) stream of
+
+    (q_t, adj_t, positions_t, compute_rate_t, tx_rate_t)
+
+consumed *inside* the jitted `simulate()` scan.
+
+Design: **precomputed schedule rings.** A generator materializes each
+stream once, host-side, as a ``(T_field, ...)`` array; inside jit the
+step-`t` snapshot is ``field[t % T_field]`` — a dynamic-slice gather,
+no recompilation, no host round-trips. Every field rings at its *own*
+period, so a straggler profile with a 64-step duty cycle over a frozen
+graph stores one ``(1, N, N)`` Q next to a ``(64, N)`` rate ring
+instead of tiling the graph 64 times. (The alternative — an in-jit
+`lax.switch` over generator bodies — would re-derive Q/Metropolis
+weights every window on device; rings pay that cost once and keep the
+scan body identical for every scenario.)
+
+Invariants every generator must uphold at **every** scheduled step
+(`validate_schedule` checks them; the property suite fuzzes them):
+row-stochastic zero-diagonal ``q_t``, boolean zero-diagonal ``adj_t``
+with ``q_t`` supported on it, symmetric doubly-stochastic ``w_sym_t``,
+and non-negative rate rings.
+
+Generators register with `@register_scenario("name")` — the same
+string-keyed singleton idiom as the algorithm registry — and are built
+via `make_schedule(name, cfg, key=..., **knobs)`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Snapshot(NamedTuple):
+    """One scheduled step's view of the world, as consumed by step fns.
+
+    `positions`/`compute_rate`/`tx_rate` are None for scenarios that do
+    not vary them — step functions then fall back to their frozen-path
+    behavior bit-for-bit (state-carried positions, config-rate events).
+    """
+
+    q: jax.Array  # (N, N) row-stochastic gossip weights
+    adj: jax.Array  # (N, N) bool adjacency
+    w_sym: jax.Array  # (N, N) symmetric Metropolis weights
+    positions: Optional[jax.Array] = None  # (N, 2) node coordinates
+    compute_rate: Optional[jax.Array] = None  # (N,) lambda_grad multiplier
+    tx_rate: Optional[jax.Array] = None  # (N,) lambda_tx multiplier
+
+
+class Schedule(NamedTuple):
+    """Precomputed scenario rings; a pytree of device arrays.
+
+    Leading axes are per-field periods: `at(t)` indexes each field by
+    ``t % field.shape[0]``, so constant fields are stored once.
+    """
+
+    q: jax.Array  # (Tq, N, N)
+    adj: jax.Array  # (Tq, N, N) bool
+    w_sym: jax.Array  # (Tq, N, N)
+    positions: Optional[jax.Array] = None  # (Tp, N, 2)
+    compute_rate: Optional[jax.Array] = None  # (Tr, N)
+    tx_rate: Optional[jax.Array] = None  # (Tt, N)
+
+    @property
+    def period(self) -> int:
+        """Longest field period (the schedule repeats after lcm, but the
+        max is what tests sweep to see every distinct row)."""
+        return max(x.shape[0] for x in self if x is not None)
+
+    @property
+    def num_clients(self) -> int:
+        return self.q.shape[1]
+
+    def at(self, t) -> Snapshot:
+        """Step-`t` snapshot: per-field ring lookup, jit-traceable."""
+        t = jnp.asarray(t, jnp.int32)
+
+        def pick(x):
+            return None if x is None else x[jnp.mod(t, x.shape[0])]
+
+        return Snapshot(pick(self.q), pick(self.adj), pick(self.w_sym),
+                        pick(self.positions), pick(self.compute_rate),
+                        pick(self.tx_rate))
+
+
+GeneratorFn = Callable[..., Schedule]
+
+_REGISTRY: Dict[str, GeneratorFn] = {}
+
+
+def register_scenario(name: str):
+    """Decorator: register `fn(cfg, key=None, **knobs) -> Schedule`."""
+
+    def deco(fn: GeneratorFn) -> GeneratorFn:
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_scenario(name: str) -> GeneratorFn:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_scenarios() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_schedule(scenario: Union[str, Schedule], cfg, key=None,
+                  **knobs) -> Schedule:
+    """Build (or pass through) a `Schedule` for a config.
+
+    `scenario` is a registered generator name or an already-built
+    `Schedule`; `key` seeds random structure (graph sampling, mobility,
+    straggler draws) exactly like `graph_key` seeds the frozen path.
+    """
+    if isinstance(scenario, Schedule):
+        if knobs:
+            raise ValueError("knobs are only valid with a generator name")
+        return scenario
+    return get_scenario(scenario)(cfg, key=key, **knobs)
+
+
+def check_snapshot(q, adj, w_sym, atol: float = 1e-5, label: str = "") -> None:
+    """Assert the invariant triple on one scheduled step: row-stochastic
+    zero-diagonal Q supported on the boolean zero-diagonal adjacency,
+    symmetric doubly-stochastic non-negative Metropolis weights. The
+    single source of truth — `validate_schedule` and the property suite
+    both run exactly this."""
+    from repro.core.topology import is_row_stochastic
+
+    assert is_row_stochastic(q), f"q not row-stochastic {label}"
+    assert float(jnp.abs(jnp.diag(q)).max()) == 0.0, f"q diagonal {label}"
+    assert not bool(jnp.diag(adj).any()), f"adj diagonal {label}"
+    assert bool(jnp.all((q > 0) <= adj)), f"q off adj support {label}"
+    w = np.asarray(w_sym)
+    np.testing.assert_allclose(w, w.T, atol=atol,
+                               err_msg=f"w_sym asymmetric {label}")
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=atol,
+                               err_msg=f"w_sym rows {label}")
+    np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=atol,
+                               err_msg=f"w_sym cols {label}")
+    assert (w >= -atol).all(), f"negative w_sym {label}"
+
+
+def validate_schedule(sched: Schedule, atol: float = 1e-5) -> None:
+    """Assert the scenario invariants at every scheduled step (host-side:
+    generators and tests, not jit)."""
+    Tq, n, _ = sched.q.shape
+    assert sched.adj.shape == (Tq, n, n) and sched.w_sym.shape == (Tq, n, n)
+    assert sched.adj.dtype == jnp.bool_
+    for t in range(Tq):
+        check_snapshot(sched.q[t], sched.adj[t], sched.w_sym[t], atol=atol,
+                       label=f"at step {t}")
+    if sched.positions is not None:
+        assert sched.positions.shape[1:] == (n, 2)
+    for rates in (sched.compute_rate, sched.tx_rate):
+        if rates is not None:
+            assert rates.shape[1:] == (n,)
+            assert bool(jnp.all(rates >= 0)), "negative rate ring"

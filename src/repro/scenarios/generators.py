@@ -1,0 +1,222 @@
+"""The built-in scenario generators.
+
+Four workload families over the `Schedule` ring abstraction:
+
+  - ``static``          — the frozen t=0 graph as a period-1 ring; the
+    parity anchor (bit-for-bit equal to the frozen-graph simulator).
+  - ``markov-edge-flip`` — per-edge on/off Markov chains with a tunable
+    churn rate and stationary density, re-normalized row-stochastic
+    each step (topology as a time-varying control variable, DySTop-
+    style).
+  - ``random-waypoint``  — node mobility in the deployment disk; the
+    adjacency and Q are re-derived from channel geometry each epoch
+    (links within range, gossip weights by path-gain), and the position
+    ring feeds the wireless channel so per-link delays are redrawn from
+    the current geometry.
+  - ``straggler-profile`` — frozen graph, time-varying per-client
+    compute rates: heavy-tailed (Pareto) slowdowns plus on/off duty
+    cycles modulating DRACO's decoupled computation schedule.
+
+All generators precompute host-side with numpy (seeded from a JAX key
+exactly like `topology.adjacency("erdos")` does) and return device
+rings; nothing here runs inside jit.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import channel as channel_lib
+from repro.core.channel import ChannelConfig
+from repro.core.topology import adjacency, metropolis, row_stochastic
+from repro.scenarios.base import Schedule, register_scenario
+
+
+def _np_rng(key) -> np.random.Generator:
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+
+
+def _cycle_overlay(a: np.ndarray) -> np.ndarray:
+    """Always-on bidirectional Hamiltonian cycle: keeps every snapshot
+    strongly connected (and the symmetrized graph connected for the
+    *-symm baselines) no matter how hard the generator churns."""
+    n = a.shape[0]
+    idx = np.arange(n)
+    a[idx, (idx + 1) % n] = True
+    a[(idx + 1) % n, idx] = True
+    return a
+
+
+def _rings_from_adjs(adjs, weights=None) -> Schedule:
+    """Stack per-step (adj_t[, link weights_t]) into q/adj/w_sym rings."""
+    qs, ws = [], []
+    for t, a in enumerate(adjs):
+        a = jnp.asarray(a)
+        qs.append(row_stochastic(a, None if weights is None else weights[t]))
+        ws.append(metropolis(a))
+    return Schedule(q=jnp.stack(qs), adj=jnp.stack([jnp.asarray(a) for a in adjs]),
+                    w_sym=jnp.stack(ws))
+
+
+@register_scenario("static")
+def static(cfg, key=None) -> Schedule:
+    """The frozen t=0 graph as a period-1 ring.
+
+    Built from the same `adjacency`/`row_stochastic`/`metropolis` calls
+    (and the same `key`) as the frozen `make_context` path, so a static
+    scenario run is bit-for-bit identical to the scenario-less simulator
+    (`tests/test_scenarios_parity.py` enforces this).
+    """
+    adj = adjacency(cfg.topology, cfg.num_clients, key=key)
+    return Schedule(q=row_stochastic(adj)[None], adj=adj[None],
+                    w_sym=metropolis(adj)[None])
+
+
+@register_scenario("markov-edge-flip")
+def markov_edge_flip(cfg, key=None, steps: int = 32, churn: float = 0.1,
+                     density: Optional[float] = None,
+                     keep_connected: bool = True) -> Schedule:
+    """Per-edge on/off Markov chains over all directed pairs.
+
+    Each off-diagonal edge flips between on and off with per-step rates
+    chosen so the chain's stationary on-probability equals `density`
+    (default: the base topology's own edge density): P(on->off) = churn,
+    P(off->on) = churn * density / (1 - density). `churn` therefore
+    dials link volatility at constant expected connectivity — churn=0
+    freezes the base graph. Step 0 is the base topology itself.
+
+    On dense bases the off->on rate can exceed 1; both rates are then
+    scaled down together, which preserves the stationary density exactly
+    (the contract a churn sweep relies on) at the cost of saturating the
+    effective volatility at its densest-feasible value.
+    """
+    n = cfg.num_clients
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k_base, k_chain = jax.random.split(key)
+    rng = _np_rng(k_chain)
+    base = np.asarray(adjacency(cfg.topology, n, key=k_base)).copy()
+    off_diag = ~np.eye(n, dtype=bool)
+    if density is None:
+        density = float(base[off_diag].mean())
+    density = float(np.clip(density, 0.05, 0.95))
+    p_on_off = float(np.clip(churn, 0.0, 1.0))
+    p_off_on = p_on_off * density / (1.0 - density)
+    if p_off_on > 1.0:
+        p_on_off, p_off_on = p_on_off / p_off_on, 1.0
+
+    edges = base.copy()
+    adjs = []
+    for _ in range(int(steps)):
+        a = edges & off_diag
+        if keep_connected:
+            a = _cycle_overlay(a.copy())
+        adjs.append(a)
+        u = rng.random((n, n))
+        edges = np.where(edges, u >= p_on_off, u < p_off_on) & off_diag
+    return _rings_from_adjs(adjs)
+
+
+@register_scenario("random-waypoint")
+def random_waypoint(cfg, key=None, steps: int = 32, speed: float = 25.0,
+                    comm_radius_frac: float = 0.5, gain_cap: float = 16.0,
+                    keep_connected: bool = True) -> Schedule:
+    """Random-waypoint mobility: each node moves toward a uniform target
+    in the deployment disk at `speed` m/epoch, resampling on arrival.
+
+    The graph is re-derived from channel geometry every epoch: nodes
+    within `comm_radius_frac * R` are linked, and Q weights each row by
+    path gain (d^-alpha) over the in-range neighbors — nearer neighbors
+    carry more gossip mass, exactly as the wireless channel favors them.
+    `gain_cap` bounds the weight ratio between the nearest and the
+    edge-of-range neighbor (raw d^-4 spans ~9 orders of magnitude and
+    would park a whole row's mass on one link, strangling diffusion);
+    the cap keeps Q geometry-aware but still mixing. The position ring
+    feeds the channel model inside the scan, so per-link delays/drops
+    are redrawn from the *current* geometry.
+    """
+    n = cfg.num_clients
+    chan = cfg.channel or ChannelConfig()
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k_pos, k_wp, k_next = jax.random.split(key, 3)
+    rng = _np_rng(k_next)
+    pos = np.asarray(channel_lib.place_nodes(k_pos, n, chan)).copy()
+    wp = np.asarray(channel_lib.place_nodes(k_wp, n, chan)).copy()
+
+    def sample_wp(m: int) -> np.ndarray:
+        r = chan.radius * np.sqrt(rng.random(m))
+        th = 2 * np.pi * rng.random(m)
+        return np.stack([r * np.cos(th), r * np.sin(th)], axis=-1)
+
+    traj, adjs, gains = [], [], []
+    max_range = comm_radius_frac * chan.radius
+    for _ in range(int(steps)):
+        traj.append(pos.copy())
+        dist = np.asarray(channel_lib.pairwise_dist(jnp.asarray(pos)))
+        a = np.asarray(channel_lib.geometric_adjacency(jnp.asarray(pos),
+                                                       max_range))
+        if keep_connected:
+            a = _cycle_overlay(a.copy())
+        adjs.append(a)
+        # path gain relative to the link budget edge: (d / max_range)^-alpha
+        # is >= 1 on every in-range link, so row sums stay well above the
+        # row_stochastic degree floor no matter the absolute scale of d
+        g = (dist / max_range) ** (-chan.path_loss_exp)
+        gains.append(jnp.asarray(np.minimum(g, gain_cap), jnp.float32))
+        new_pos, arrived = channel_lib.waypoint_step(jnp.asarray(pos),
+                                                     jnp.asarray(wp), speed)
+        pos = np.asarray(new_pos).copy()
+        arrived = np.asarray(arrived)
+        if arrived.any():
+            wp[arrived] = sample_wp(int(arrived.sum()))
+    sched = _rings_from_adjs(adjs, weights=gains)
+    return sched._replace(positions=jnp.asarray(np.stack(traj), jnp.float32))
+
+
+@register_scenario("straggler-profile")
+def straggler_profile(cfg, key=None, steps: int = 32,
+                      straggler_frac: float = 0.3, slowdown: float = 10.0,
+                      duty: float = 1.0, tail: float = 1.5,
+                      modulate_tx: bool = False) -> Schedule:
+    """Frozen graph, time-varying per-client compute rates.
+
+    A `straggler_frac` subset of clients runs slow: each straggler's
+    rate multiplier is 1 / (slowdown * (1 + Pareto(tail))) — heavy-
+    tailed, so a few clients are *much* slower than the typical
+    straggler — optionally gated by a per-client-phased duty cycle
+    (`duty` = fraction of the `steps`-long period the straggler is
+    powered at all; 1.0 = always on at the slowed rate). Non-stragglers
+    stay at rate 1. The ring multiplies `lambda_grad` in DRACO's
+    decoupled computation schedule (and `lambda_tx` too iff
+    `modulate_tx`); baselines read it as participation probability.
+    """
+    n, T = cfg.num_clients, int(steps)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k_graph, k_draw = jax.random.split(key)
+    rng = _np_rng(k_draw)
+    adj = adjacency(cfg.topology, n, key=k_graph)
+
+    num_slow = int(round(np.clip(straggler_frac, 0.0, 1.0) * n))
+    slow = np.zeros((n,), bool)
+    slow[rng.choice(n, size=num_slow, replace=False)] = True
+    factor = np.where(slow, slowdown * (1.0 + rng.pareto(tail, n)), 1.0)
+    base_rate = 1.0 / factor  # (n,) in (0, 1], ==1 for non-stragglers
+
+    rate = np.tile(base_rate, (T, 1))
+    if duty < 1.0:
+        on_steps = max(1, int(round(duty * T)))
+        phase = rng.integers(0, T, size=n)
+        t_idx = (np.arange(T)[:, None] - phase[None, :]) % T
+        powered = (t_idx < on_steps) | ~slow[None, :]  # duty gates stragglers
+        rate = rate * powered
+    rate = jnp.asarray(rate, jnp.float32)
+    return Schedule(q=row_stochastic(adj)[None], adj=adj[None],
+                    w_sym=metropolis(adj)[None], compute_rate=rate,
+                    tx_rate=rate if modulate_tx else None)

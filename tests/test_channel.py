@@ -1,3 +1,5 @@
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -5,6 +7,7 @@ import numpy as np
 from repro.core.channel import (
     ChannelConfig,
     LIGHTSPEED,
+    interference,
     pairwise_dist,
     place_nodes,
     transmission_delays,
@@ -58,3 +61,76 @@ def test_bigger_message_slower():
     g_small, _ = transmission_delays(k, pos, tx, cfg_small)
     g_big, _ = transmission_delays(k, pos, tx, cfg_big)
     assert bool((g_big >= g_small).all())
+
+
+# --------------------------------------------------------------------------
+# Regression battery: silent-mask, interference sign, deadline boundary
+# --------------------------------------------------------------------------
+
+
+def test_all_tx_false_yields_no_successes():
+    """A silent network (tx_mask all False) can produce zero successful
+    links — and zero interference on every hypothetical link."""
+    cfg, key, pos = _setup(n=10, message_bytes=10_000)
+    tx = jnp.zeros((10,), bool)
+    gamma, succ = transmission_delays(jax.random.fold_in(key, 7), pos, tx, cfg)
+    assert not bool(succ.any())
+    assert bool(jnp.isfinite(gamma).all())
+    dist = pairwise_dist(pos)
+    p_rx = jax.random.exponential(jax.random.fold_in(key, 8), (10, 10))
+    assert float(interference(dist, p_rx, tx, cfg).max()) == 0.0
+
+
+def test_interference_self_subtraction_never_negative():
+    """The self-subtraction removes one term of the sum it belongs to, so
+    interference is >= 0 both with the clamp (exactly) and without it
+    (up to f32 rounding) — dense clusters maximize cancellation error."""
+    cfg = ChannelConfig(interference_radius_frac=1.0)  # everyone is close
+    key = jax.random.PRNGKey(17)
+    for seed in range(5):
+        k = jax.random.fold_in(key, seed)
+        pos = place_nodes(k, 16, cfg) * 0.01  # dense cluster
+        dist = pairwise_dist(pos)
+        p_rx = cfg.tx_power_w * jax.random.exponential(
+            jax.random.fold_in(k, 1), (16, 16)) * dist ** (-cfg.path_loss_exp)
+        tx = jax.random.uniform(jax.random.fold_in(k, 2), (16,)) < 0.7
+        interf = interference(dist, p_rx, tx, cfg)
+        assert float(interf.min()) >= 0.0
+        # the unclamped subtraction: a sum minus one of its own terms
+        contrib = np.where(np.asarray((dist <= cfg.interference_radius_frac
+                                       * cfg.radius) & tx[:, None]),
+                           np.asarray(p_rx), 0.0)
+        raw = contrib.sum(axis=0)[None, :] - contrib
+        assert raw.min() >= -1e-6 * max(contrib.sum(), 1.0)
+
+
+def test_interference_single_transmitter_sees_none():
+    """With exactly one close transmitter i, link i -> j suffers zero
+    interference (its own signal is fully subtracted)."""
+    cfg = ChannelConfig(interference_radius_frac=1.0)
+    pos = jnp.array([[0.0, 0.0], [10.0, 0.0], [20.0, 0.0]])
+    dist = pairwise_dist(pos)
+    p_rx = jnp.ones((3, 3))
+    tx = jnp.array([True, False, False])  # only node 0 transmits
+    interf = np.asarray(interference(dist, p_rx, tx, cfg))
+    assert (interf[0] == 0.0).all()  # links 0 -> j: own signal removed
+    assert (interf[1:] == 1.0).all()  # other senders see node 0's power
+
+
+def test_success_respects_gamma_max_exactly_at_boundary():
+    """success is Gamma <= gamma_max: a deadline set to a link's exact
+    delay keeps the link; one f32 ulp below kills it."""
+    cfg, key, pos = _setup(n=8, message_bytes=51_640, gamma_max=1e9)
+    tx = jnp.ones((8,), bool)
+    k = jax.random.fold_in(key, 4)
+    gamma, succ = transmission_delays(k, pos, tx, cfg)
+    g = float(np.asarray(gamma)[0, 1])  # exact f32 value of one delay
+
+    at = dataclasses.replace(cfg, gamma_max=g)
+    _, succ_at = transmission_delays(k, pos, tx, at)  # same key, same fading
+    assert bool(succ_at[0, 1])
+
+    below = dataclasses.replace(
+        cfg, gamma_max=float(np.nextafter(np.float32(g), np.float32(0))))
+    _, succ_below = transmission_delays(k, pos, tx, below)
+    assert not bool(succ_below[0, 1])

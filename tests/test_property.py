@@ -1,89 +1,175 @@
-"""Hypothesis property tests on system invariants."""
+"""Property tests on system invariants, for every topology generator.
+
+Two tiers:
+
+1. A **deterministic battery** that always runs (no hypothesis needed):
+   row-stochasticity (`is_row_stochastic`), zero diagonal, Metropolis
+   symmetry/double-stochasticity, and Q-on-adjacency support — checked
+   for every static topology AND for every registered time-varying
+   scenario generator at 50 random schedule steps (the exact in-scan
+   view, `schedule.at(t)`).
+2. A **hypothesis fuzz battery** over the same invariants plus mixing
+   algebra (mass conservation, permutation equivariance, Psi budget,
+   spectral bounds), active whenever `hypothesis` is importable —
+   `requirements-dev.txt` pins it, so CI always fuzzes; only bare
+   runtime-only environments fall back to tier 1 alone.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from repro.core.protocol import DracoConfig
+from repro.core.topology import (
+    adjacency,
+    is_row_stochastic,
+    metropolis,
+    row_stochastic,
+)
+from repro.scenarios import check_snapshot, list_scenarios, make_schedule
 
-from repro.core.mixing import mix_dense, psi_cap_mask
-from repro.core.topology import adjacency, is_row_stochastic, metropolis, row_stochastic
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
 
-TOPOS = st.sampled_from(["cycle", "complete", "star", "erdos"])
-
-
-@settings(max_examples=30, deadline=None)
-@given(topo=TOPOS, n=st.integers(3, 40), seed=st.integers(0, 1000))
-def test_row_stochastic_always(topo, n, seed):
-    adj = adjacency(topo, n, key=jax.random.PRNGKey(seed))
-    q = row_stochastic(adj)
-    assert is_row_stochastic(q)
-
-
-@settings(max_examples=25, deadline=None)
-@given(n=st.integers(3, 30), psi=st.integers(1, 6), seed=st.integers(0, 1000))
-def test_psi_cap_budget_always(n, psi, seed):
-    q = row_stochastic(adjacency("complete", n))
-    capped = psi_cap_mask(jax.random.PRNGKey(seed), q, psi)
-    incoming = np.asarray((capped > 0).sum(0))
-    assert (incoming <= psi).all()
-    # capping never increases any weight
-    assert (np.asarray(capped) <= np.asarray(q) + 1e-9).all()
+STATIC_TOPOS = ["cycle", "complete", "star", "erdos"]
+NUM_SCHEDULE_STEPS = 50
 
 
-@settings(max_examples=25, deadline=None)
-@given(n=st.integers(2, 16), d=st.integers(1, 64), seed=st.integers(0, 1000))
-def test_mixing_mass_conservation(n, d, seed):
-    """Row-stochastic mixing redistributes but never creates mass:
-    sum_j out_j == sum_i (rowsum_i) delta_i == sum_i delta_i."""
-    key = jax.random.PRNGKey(seed)
-    q = row_stochastic(adjacency("complete", n))
-    deltas = {"w": jax.random.normal(jax.random.fold_in(key, 1), (n, d))}
-    out = mix_dense(q, deltas)
-    np.testing.assert_allclose(np.asarray(out["w"].sum(0)),
-                               np.asarray(deltas["w"].sum(0)), atol=1e-3)
+# --------------------------------------------------------------------------
+# Tier 1: deterministic battery (always runs)
+# --------------------------------------------------------------------------
 
 
-@settings(max_examples=20, deadline=None)
-@given(n=st.integers(3, 20), seed=st.integers(0, 1000))
-def test_metropolis_spectral(n, seed):
-    """Metropolis matrix: doubly stochastic, symmetric, eigenvalues in
-    [-1, 1] with lambda_1 = 1 (consensus-preserving)."""
-    adj = adjacency("erdos", n, key=jax.random.PRNGKey(seed))
-    w = np.asarray(metropolis(adj))
-    ev = np.linalg.eigvalsh(w)
-    assert ev.max() <= 1.0 + 1e-5
-    assert ev.min() >= -1.0 - 1e-5
-    np.testing.assert_allclose(ev.max(), 1.0, atol=1e-5)
+@pytest.mark.parametrize("topo", STATIC_TOPOS + ["ring2d"])
+@pytest.mark.parametrize("directed", [False, True])
+def test_static_topology_invariants(topo, directed):
+    for n, seed in ((9, 0), (16, 1)):
+        adj = adjacency(topo, n, key=jax.random.PRNGKey(seed),
+                        directed=directed)
+        check_snapshot(row_stochastic(adj), adj, metropolis(adj),
+                       label=f"({topo}, n={n}, directed={directed})")
 
 
-@settings(max_examples=15, deadline=None)
-@given(n=st.integers(2, 12), d=st.integers(1, 32), seed=st.integers(0, 500))
-def test_mix_permutation_equivariance(n, d, seed):
-    """Relabeling clients commutes with mixing: P^T Q^T D = (QP)^T ..."""
-    key = jax.random.PRNGKey(seed)
-    q = row_stochastic(adjacency("complete", n))
-    deltas = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
-    perm = jax.random.permutation(jax.random.fold_in(key, 2), n)
-    out = mix_dense(q, {"w": deltas})["w"]
-    q_p = q[perm][:, perm]
-    out_p = mix_dense(q_p, {"w": deltas[perm]})["w"]
-    np.testing.assert_allclose(np.asarray(out[perm]), np.asarray(out_p),
-                               atol=1e-4, rtol=1e-4)
+@pytest.mark.parametrize("gen", list_scenarios())
+@pytest.mark.parametrize("seed", [0, 1])
+def test_scenario_invariants_at_50_random_steps(gen, seed):
+    """Every registered scenario generator — including every time-varying
+    one — upholds the invariants at 50 random schedule steps, sampled
+    past the ring period so wrap-around rows are covered too."""
+    cfg = DracoConfig(num_clients=7, topology="erdos")
+    kw = {} if gen == "static" else {"steps": 12}
+    sched = make_schedule(gen, cfg, key=jax.random.PRNGKey(seed), **kw)
+    rng = np.random.default_rng(seed)
+    for t in rng.integers(0, 4 * sched.period, size=NUM_SCHEDULE_STEPS):
+        snap = sched.at(int(t))
+        check_snapshot(snap.q, snap.adj, snap.w_sym,
+                       label=f"({gen}, step {t})")
+        for rate in (snap.compute_rate, snap.tx_rate):
+            if rate is not None:
+                assert bool(jnp.all(rate >= 0)), f"negative rate ({gen}, {t})"
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 100), b=st.integers(1, 3), s=st.sampled_from([8, 16]))
-def test_model_logits_finite_random_inputs(seed, b, s):
-    """Unified decoder never produces NaN on random tokens (reduced dense)."""
-    from repro.configs.base import get_reduced
-    from repro.models.registry import build_model
+# --------------------------------------------------------------------------
+# Tier 2: hypothesis fuzz battery (runs whenever hypothesis is installed)
+# --------------------------------------------------------------------------
 
-    cfg = get_reduced("qwen2-1.5b")
-    m = build_model(cfg)
-    key = jax.random.PRNGKey(seed)
-    params = m.init(key)
-    toks = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0, cfg.vocab_size)
-    logits, _ = m.apply(params, {"tokens": toks})
-    assert bool(jnp.isfinite(logits).all())
+if HAVE_HYPOTHESIS:
+    TOPOS = st.sampled_from(STATIC_TOPOS)
+    GENS = st.sampled_from(list_scenarios())
+
+    @settings(max_examples=30, deadline=None)
+    @given(topo=TOPOS, n=st.integers(3, 40), seed=st.integers(0, 1000))
+    def test_row_stochastic_always(topo, n, seed):
+        adj = adjacency(topo, n, key=jax.random.PRNGKey(seed))
+        q = row_stochastic(adj)
+        assert is_row_stochastic(q)
+
+    @settings(max_examples=10, deadline=None)
+    @given(gen=GENS, topo=TOPOS, n=st.integers(4, 12),
+           seed=st.integers(0, 1000), steps=st.integers(1, 6))
+    def test_scenario_invariants_fuzzed(gen, topo, n, seed, steps):
+        """Random (generator, base topology, size, seed, ring length):
+        every scheduled step upholds the invariant triple."""
+        cfg = DracoConfig(num_clients=n, topology=topo)
+        kw = {} if gen == "static" else {"steps": steps}
+        sched = make_schedule(gen, cfg, key=jax.random.PRNGKey(seed), **kw)
+        for t in range(sched.period):
+            snap = sched.at(t)
+            check_snapshot(snap.q, snap.adj, snap.w_sym,
+                           label=f"({gen}/{topo}, step {t})")
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(3, 30), psi=st.integers(1, 6),
+           seed=st.integers(0, 1000))
+    def test_psi_cap_budget_always(n, psi, seed):
+        from repro.core.mixing import psi_cap_mask
+
+        q = row_stochastic(adjacency("complete", n))
+        capped = psi_cap_mask(jax.random.PRNGKey(seed), q, psi)
+        incoming = np.asarray((capped > 0).sum(0))
+        assert (incoming <= psi).all()
+        # capping never increases any weight
+        assert (np.asarray(capped) <= np.asarray(q) + 1e-9).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(2, 16), d=st.integers(1, 64),
+           seed=st.integers(0, 1000))
+    def test_mixing_mass_conservation(n, d, seed):
+        """Row-stochastic mixing redistributes but never creates mass:
+        sum_j out_j == sum_i (rowsum_i) delta_i == sum_i delta_i."""
+        from repro.core.mixing import mix_dense
+
+        key = jax.random.PRNGKey(seed)
+        q = row_stochastic(adjacency("complete", n))
+        deltas = {"w": jax.random.normal(jax.random.fold_in(key, 1), (n, d))}
+        out = mix_dense(q, deltas)
+        np.testing.assert_allclose(np.asarray(out["w"].sum(0)),
+                                   np.asarray(deltas["w"].sum(0)), atol=1e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(3, 20), seed=st.integers(0, 1000))
+    def test_metropolis_spectral(n, seed):
+        """Metropolis matrix: doubly stochastic, symmetric, eigenvalues in
+        [-1, 1] with lambda_1 = 1 (consensus-preserving)."""
+        adj = adjacency("erdos", n, key=jax.random.PRNGKey(seed))
+        w = np.asarray(metropolis(adj))
+        ev = np.linalg.eigvalsh(w)
+        assert ev.max() <= 1.0 + 1e-5
+        assert ev.min() >= -1.0 - 1e-5
+        np.testing.assert_allclose(ev.max(), 1.0, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(2, 12), d=st.integers(1, 32), seed=st.integers(0, 500))
+    def test_mix_permutation_equivariance(n, d, seed):
+        """Relabeling clients commutes with mixing: P^T Q^T D = (QP)^T ..."""
+        from repro.core.mixing import mix_dense
+
+        key = jax.random.PRNGKey(seed)
+        q = row_stochastic(adjacency("complete", n))
+        deltas = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+        perm = jax.random.permutation(jax.random.fold_in(key, 2), n)
+        out = mix_dense(q, {"w": deltas})["w"]
+        q_p = q[perm][:, perm]
+        out_p = mix_dense(q_p, {"w": deltas[perm]})["w"]
+        np.testing.assert_allclose(np.asarray(out[perm]), np.asarray(out_p),
+                                   atol=1e-4, rtol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 100), b=st.integers(1, 3),
+           s=st.sampled_from([8, 16]))
+    def test_model_logits_finite_random_inputs(seed, b, s):
+        """Unified decoder never produces NaN on random tokens."""
+        from repro.configs.base import get_reduced
+        from repro.models.registry import build_model
+
+        cfg = get_reduced("qwen2-1.5b")
+        m = build_model(cfg)
+        key = jax.random.PRNGKey(seed)
+        params = m.init(key)
+        toks = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0,
+                                  cfg.vocab_size)
+        logits, _ = m.apply(params, {"tokens": toks})
+        assert bool(jnp.isfinite(logits).all())

@@ -1,0 +1,177 @@
+"""Unit tests for the scenario engine: rings, registry, generators."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.channel import ChannelConfig, geometric_adjacency, waypoint_step
+from repro.core.protocol import DracoConfig
+from repro.scenarios import (
+    Schedule,
+    get_scenario,
+    list_scenarios,
+    make_schedule,
+    validate_schedule,
+)
+
+ALL_GENERATORS = ("markov-edge-flip", "random-waypoint", "static",
+                  "straggler-profile")
+
+
+def _cfg(**kw):
+    base = dict(num_clients=7, topology="cycle")
+    base.update(kw)
+    return DracoConfig(**base)
+
+
+def test_registry_lists_builtins():
+    assert list_scenarios() == ALL_GENERATORS
+    for name in ALL_GENERATORS:
+        assert callable(get_scenario(name))
+    with pytest.raises(KeyError):
+        get_scenario("no-such-scenario")
+
+
+def test_make_schedule_passthrough_and_knob_guard():
+    cfg = _cfg()
+    sched = make_schedule("static", cfg)
+    assert make_schedule(sched, cfg) is sched
+    with pytest.raises(ValueError, match="knobs"):
+        make_schedule(sched, cfg, steps=4)
+
+
+def test_per_field_ring_periods():
+    """Fields ring at their own periods: a straggler profile stores the
+    frozen graph once next to a T-long rate ring, and `at` wraps each
+    field by its own leading dim."""
+    cfg = _cfg()
+    sched = make_schedule("straggler-profile", cfg, key=jax.random.PRNGKey(0),
+                          steps=6, straggler_frac=0.5, duty=0.5)
+    assert sched.q.shape[0] == 1
+    assert sched.compute_rate.shape == (6, cfg.num_clients)
+    assert sched.period == 6
+    for t in (0, 3, 6, 13):
+        snap = sched.at(t)
+        np.testing.assert_array_equal(np.asarray(snap.q),
+                                      np.asarray(sched.q[0]))
+        np.testing.assert_array_equal(np.asarray(snap.compute_rate),
+                                      np.asarray(sched.compute_rate[t % 6]))
+
+
+def test_schedule_at_traceable():
+    cfg = _cfg()
+    sched = make_schedule("markov-edge-flip", cfg, key=jax.random.PRNGKey(1),
+                          steps=4)
+    q3 = jax.jit(lambda s, t: s.at(t).q)(sched, jnp.int32(3))
+    np.testing.assert_array_equal(np.asarray(q3), np.asarray(sched.q[3]))
+
+
+@pytest.mark.parametrize("name", ALL_GENERATORS)
+def test_generators_validate(name):
+    cfg = _cfg(topology="erdos")
+    kw = {} if name == "static" else {"steps": 8}
+    sched = make_schedule(name, cfg, key=jax.random.PRNGKey(2), **kw)
+    validate_schedule(sched)
+    assert sched.num_clients == cfg.num_clients
+
+
+def test_markov_churn_zero_freezes_base():
+    cfg = _cfg(topology="complete")
+    sched = make_schedule("markov-edge-flip", cfg, key=jax.random.PRNGKey(3),
+                          steps=5, churn=0.0)
+    for t in range(1, 5):
+        np.testing.assert_array_equal(np.asarray(sched.adj[t]),
+                                      np.asarray(sched.adj[0]))
+
+
+def test_markov_dense_base_preserves_density():
+    """On dense bases the off->on rate saturates; the chain must scale
+    both rates together so the stationary edge density stays at the
+    base's (a churn sweep holds connectivity fixed, regression)."""
+    cfg = _cfg(num_clients=12, topology="complete")
+    sched = make_schedule("markov-edge-flip", cfg, key=jax.random.PRNGKey(9),
+                          steps=40, churn=0.5, keep_connected=False)
+    off = ~np.eye(12, dtype=bool)
+    densities = [np.asarray(sched.adj[t])[off].mean() for t in range(40)]
+    # stationary density is clipped to 0.95 for a complete base; the
+    # time-average must stay near it instead of drifting to 1/(1+churn)
+    assert np.mean(densities[10:]) > 0.9
+
+
+def test_markov_churn_actually_churns():
+    cfg = _cfg(num_clients=10, topology="erdos")
+    sched = make_schedule("markov-edge-flip", cfg, key=jax.random.PRNGKey(4),
+                          steps=8, churn=0.5)
+    diffs = sum(int((np.asarray(sched.adj[t]) != np.asarray(sched.adj[t - 1])).sum())
+                for t in range(1, 8))
+    assert diffs > 0
+
+
+def test_waypoint_positions_in_disk_and_speed_bounded():
+    cfg = _cfg(channel=ChannelConfig())
+    speed = 30.0
+    sched = make_schedule("random-waypoint", cfg, key=jax.random.PRNGKey(5),
+                          steps=10, speed=speed)
+    pos = np.asarray(sched.positions)
+    radii = np.linalg.norm(pos, axis=-1)
+    assert radii.max() <= cfg.channel.radius + 1e-3
+    hops = np.linalg.norm(np.diff(pos, axis=0), axis=-1)
+    assert hops.max() <= speed + 1e-3
+
+
+def test_waypoint_adjacency_matches_geometry():
+    cfg = _cfg(channel=ChannelConfig())
+    frac = 0.5
+    sched = make_schedule("random-waypoint", cfg, key=jax.random.PRNGKey(6),
+                          steps=4, comm_radius_frac=frac, keep_connected=False)
+    for t in range(4):
+        want = geometric_adjacency(sched.positions[t],
+                                   frac * cfg.channel.radius)
+        np.testing.assert_array_equal(np.asarray(sched.adj[t]),
+                                      np.asarray(want))
+
+
+def test_waypoint_step_snaps_and_advances():
+    pos = jnp.array([[0.0, 0.0], [10.0, 0.0]])
+    wp = jnp.array([[100.0, 0.0], [12.0, 0.0]])
+    new, arrived = waypoint_step(pos, wp, 5.0)
+    np.testing.assert_allclose(np.asarray(new[0]), [5.0, 0.0], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(new[1]), [12.0, 0.0], atol=1e-6)
+    assert not bool(arrived[0]) and bool(arrived[1])
+
+
+def test_straggler_rates_structure():
+    cfg = _cfg(num_clients=10)
+    sched = make_schedule("straggler-profile", cfg, key=jax.random.PRNGKey(7),
+                          steps=12, straggler_frac=0.4, slowdown=8.0,
+                          duty=1.0)
+    rate = np.asarray(sched.compute_rate)
+    assert ((rate >= 0) & (rate <= 1)).all()
+    const = rate[0]
+    # duty=1.0: the ring is constant in time
+    assert (rate == const[None, :]).all()
+    slow = const < 1.0
+    assert slow.sum() == 4  # straggler_frac * n
+    assert (const[~slow] == 1.0).all()
+    assert (const[slow] <= 1.0 / 8.0).all()  # at least `slowdown` slower
+    assert sched.tx_rate is None  # comms schedule untouched by default
+
+
+def test_straggler_duty_cycle_gates_stragglers_only():
+    cfg = _cfg(num_clients=10)
+    sched = make_schedule("straggler-profile", cfg, key=jax.random.PRNGKey(8),
+                          steps=10, straggler_frac=0.5, duty=0.3)
+    rate = np.asarray(sched.compute_rate)
+    slow = rate.max(axis=0) < 1.0
+    off_fraction = (rate[:, slow] == 0.0).mean(axis=0)
+    assert ((off_fraction > 0) & (off_fraction < 1)).all()
+    # non-stragglers are never gated
+    assert (rate[:, ~slow] == 1.0).all()
+
+
+def test_geometric_adjacency_basic():
+    pos = jnp.array([[0.0, 0.0], [3.0, 0.0], [100.0, 0.0]])
+    adj = np.asarray(geometric_adjacency(pos, 5.0))
+    assert adj[0, 1] and adj[1, 0]
+    assert not adj[0, 2] and not adj[2, 0]
+    assert not adj.diagonal().any()

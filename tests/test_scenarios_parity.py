@@ -1,0 +1,200 @@
+"""Scenario engine vs the frozen-graph simulator: bit-for-bit + liveness.
+
+The acceptance bar for the scenario engine (same guarantee style as
+tests/test_protocol_parity.py for the fused gossip engine): a `static`
+scenario run must equal the scenario-less `simulate()` path **exactly**
+— every observable of the final state, for DRACO and all four baselines
+— because the static schedule is the same graph built by the same calls,
+and step functions receive None positions/rates, i.e. the frozen code
+path. Anything weaker than `assert_array_equal` would let a schedule-
+indexing bug hide behind "close enough".
+
+The non-static generators (`markov-edge-flip`, `random-waypoint`,
+`straggler-profile`) are exercised end-to-end under jit for every
+method, including schedule wrap-around (more steps than the ring
+period), with row-stochasticity checked at every scheduled step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import get_algorithm, make_context, simulate
+from repro.core.baselines import BASELINES
+from repro.core.channel import ChannelConfig
+from repro.core.protocol import DracoConfig
+from repro.core.topology import is_row_stochastic
+from repro.data.synthetic import federated_classification, make_mlp
+
+N = 5
+DYNAMIC = ("markov-edge-flip", "random-waypoint", "straggler-profile")
+CHANNEL = ChannelConfig(message_bytes=51_640, gamma_max=10.0)
+
+
+@pytest.fixture(scope="module")
+def task():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    train, test = federated_classification(k1, N, input_dim=6, num_classes=3,
+                                           per_client=64)
+    params0, apply, loss, acc = make_mlp(k2, 6, (8,), 3)
+    return train, test, params0, loss, acc
+
+
+def _cfg(**kw):
+    base = dict(num_clients=N, lr=0.1, local_batches=1, batch_size=8,
+                lambda_grad=0.8, lambda_tx=0.8, unify_period=10, psi=2,
+                topology="complete", max_delay_windows=3, channel=None)
+    base.update(kw)
+    return DracoConfig(**base)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_static_parity_draco_bitwise(task):
+    """static scenario == frozen path for DRACO, every state observable,
+    with the wireless channel + Psi cap + unification all active."""
+    train, test, params0, loss, acc = task
+    cfg = _cfg(channel=CHANNEL)
+    key = jax.random.PRNGKey(7)
+    frozen, tr_f = simulate("draco", cfg, params0, loss, train, 12, key=key,
+                            eval_every=4, eval_fn=acc, eval_data=test)
+    static, tr_s = simulate("draco", cfg, params0, loss, train, 12, key=key,
+                            eval_every=4, eval_fn=acc, eval_data=test,
+                            scenario="static")
+    _assert_trees_equal(frozen.params, static.params)
+    np.testing.assert_array_equal(np.asarray(frozen.pending),
+                                  np.asarray(static.pending))
+    np.testing.assert_array_equal(np.asarray(frozen.buffer),
+                                  np.asarray(static.buffer))
+    np.testing.assert_array_equal(np.asarray(frozen.w_ring),
+                                  np.asarray(static.w_ring))
+    np.testing.assert_array_equal(np.asarray(frozen.delay_ring),
+                                  np.asarray(static.delay_ring))
+    np.testing.assert_array_equal(np.asarray(frozen.accept_count),
+                                  np.asarray(static.accept_count))
+    np.testing.assert_array_equal(np.asarray(frozen.total_accept),
+                                  np.asarray(static.total_accept))
+    np.testing.assert_array_equal(np.asarray(frozen.positions),
+                                  np.asarray(static.positions))
+    np.testing.assert_array_equal(np.asarray(frozen.key),
+                                  np.asarray(static.key))
+    assert int(frozen.window_idx) == int(static.window_idx) == 12
+    for k in tr_f.metrics:
+        np.testing.assert_array_equal(tr_f.metrics[k], tr_s.metrics[k])
+
+
+@pytest.mark.parametrize("method", BASELINES)
+def test_static_parity_baselines_bitwise(method, task):
+    """static scenario == frozen path for every baseline (params,
+    push weights, RNG stream)."""
+    train, _, params0, loss, _ = task
+    cfg = _cfg(topology="cycle")
+    key = jax.random.PRNGKey(11)
+    frozen, _ = simulate(method, cfg, params0, loss, train, 8, key=key)
+    static, _ = simulate(method, cfg, params0, loss, train, 8, key=key,
+                         scenario="static")
+    _assert_trees_equal(frozen.params, static.params)
+    np.testing.assert_array_equal(np.asarray(frozen.push_weight),
+                                  np.asarray(static.push_weight))
+    np.testing.assert_array_equal(np.asarray(frozen.key),
+                                  np.asarray(static.key))
+    assert int(frozen.round_idx) == int(static.round_idx) == 8
+    _assert_trees_equal(get_algorithm(method).eval_params(frozen),
+                        get_algorithm(method).eval_params(static))
+
+
+def test_static_parity_random_topology_same_key(task):
+    """With a random base topology the parity holds iff the scenario
+    generator consumes the same graph key as the frozen path."""
+    train, _, params0, loss, _ = task
+    cfg = _cfg(topology="erdos", channel=CHANNEL)
+    key, gkey = jax.random.PRNGKey(3), jax.random.PRNGKey(21)
+    frozen, _ = simulate("draco", cfg, params0, loss, train, 6, key=key,
+                         graph_key=gkey)
+    static, _ = simulate("draco", cfg, params0, loss, train, 6, key=key,
+                         graph_key=gkey, scenario="static")
+    _assert_trees_equal(frozen.params, static.params)
+
+
+@pytest.mark.parametrize("scenario", DYNAMIC)
+@pytest.mark.parametrize("method", ("draco",) + BASELINES)
+def test_dynamic_scenarios_run_under_jit(scenario, method, task):
+    """Every non-static generator drives every method end-to-end inside
+    the compiled scan, past the ring period (wrap-around), with finite
+    params and an advanced step counter."""
+    train, _, params0, loss, _ = task
+    cfg = _cfg(channel=CHANNEL if scenario == "random-waypoint" else None)
+    steps, period = 7, 4  # steps > period: exercises index wrap-around
+    st, _ = simulate(method, cfg, params0, loss, train, steps,
+                     key=jax.random.PRNGKey(5), scenario=scenario,
+                     scenario_kwargs={"steps": period})
+    for leaf in jax.tree_util.tree_leaves(st.params):
+        assert bool(jnp.isfinite(leaf).all()), (scenario, method)
+    idx = st.window_idx if method == "draco" else st.round_idx
+    assert int(idx) == steps
+
+
+def test_dynamic_schedule_rows_row_stochastic(task):
+    """The exact Q rows a dynamic run consumes (step t -> ring row
+    t % period) are row-stochastic — the in-scan view, not just the
+    generator's output."""
+    train, _, params0, loss, _ = task
+    cfg = _cfg()
+    ctx = make_context(cfg, loss, train, scenario="markov-edge-flip",
+                       scenario_key=jax.random.PRNGKey(9),
+                       scenario_kwargs={"steps": 5, "churn": 0.4})
+    for t in range(11):
+        snap = ctx.schedule.at(t)
+        assert is_row_stochastic(snap.q), f"step {t}"
+        np.testing.assert_array_equal(
+            np.asarray(snap.q), np.asarray(ctx.schedule.q[t % 5]))
+
+
+def test_mobility_positions_tracked_in_state(task):
+    """random-waypoint: the state's positions after step k equal the
+    schedule's row for step k-1 (the last window's geometry)."""
+    train, _, params0, loss, _ = task
+    cfg = _cfg(channel=CHANNEL)
+    ctx = make_context(cfg, loss, train, scenario="random-waypoint",
+                       scenario_key=jax.random.PRNGKey(13),
+                       scenario_kwargs={"steps": 6, "speed": 40.0})
+    st, _ = simulate("draco", cfg, params0, loss, train, 4,
+                     key=jax.random.PRNGKey(1), ctx=ctx)
+    np.testing.assert_array_equal(np.asarray(st.positions),
+                                  np.asarray(ctx.schedule.positions[3]))
+
+
+def test_straggler_profile_starves_gradients(task):
+    """A fully-stalled compute ring (rate 0 via 100% stragglers at
+    infinite slowdown) produces zero pending mass in DRACO — the
+    decoupled computation schedule is really being modulated."""
+    train, _, params0, loss, _ = task
+    cfg = _cfg(lambda_tx=0.0, unify_period=0)  # pending only accumulates
+    from repro.scenarios import make_schedule
+
+    sched = make_schedule("straggler-profile", cfg,
+                          key=jax.random.PRNGKey(2), steps=4,
+                          straggler_frac=1.0, slowdown=1e12)
+    ctx = make_context(cfg, loss, train)
+    stalled, _ = simulate("draco", cfg, params0, loss, train, 5,
+                          key=jax.random.PRNGKey(4),
+                          ctx=ctx.replace(schedule=sched))
+    live, _ = simulate("draco", cfg, params0, loss, train, 5,
+                       key=jax.random.PRNGKey(4), ctx=ctx)
+    assert float(jnp.abs(stalled.pending).sum()) == 0.0
+    assert float(jnp.abs(live.pending).sum()) > 0.0
+
+
+def test_scenario_with_prebuilt_ctx_rejected(task):
+    train, _, params0, loss, _ = task
+    cfg = _cfg()
+    ctx = make_context(cfg, loss, train)
+    with pytest.raises(ValueError, match="scenario"):
+        simulate("draco", cfg, params0, loss, train, 2,
+                 key=jax.random.PRNGKey(0), ctx=ctx, scenario="static")

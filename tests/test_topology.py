@@ -32,6 +32,35 @@ def test_cycle_directed_vs_undirected():
     assert int(a_und.sum()) == 12
 
 
+def _strongly_connected(a: np.ndarray) -> bool:
+    """Boolean-matrix transitive closure: every node reaches every node."""
+    n = a.shape[0]
+    reach = a | np.eye(n, dtype=bool)
+    for _ in range(int(np.ceil(np.log2(max(n, 2))))):
+        reach = reach @ reach
+    return bool(reach.all())
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_erdos_undirected_is_symmetric(seed):
+    """directed=False must return a symmetric adjacency — the one-way
+    cycle overlay used to silently break this (regression)."""
+    a = np.asarray(adjacency("erdos", 12, key=jax.random.PRNGKey(seed), p=0.2))
+    np.testing.assert_array_equal(a, a.T)
+    assert _strongly_connected(a)
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("p", [0.0, 0.15])
+def test_erdos_directed_strongly_connected(seed, p):
+    """directed=True: the directed Hamiltonian-cycle overlay guarantees
+    strong connectivity even with no random edges at all (p=0)."""
+    a = np.asarray(adjacency("erdos", 11, key=jax.random.PRNGKey(seed),
+                             p=p, directed=True))
+    assert _strongly_connected(a)
+    assert not a.diagonal().any()
+
+
 @pytest.mark.parametrize("topo", ["cycle", "complete", "erdos"])
 def test_metropolis_doubly_stochastic(topo):
     adj = adjacency(topo, 9, key=jax.random.PRNGKey(3))
