@@ -4,13 +4,14 @@
 topology. Writes a CSV of accuracy-vs-events curves to results/ and
 prints the final table.
 
-Runs through the unified `repro.api` interface: every method is a
-registered `Algorithm`, compute-matched step counts come from
-`steps_for_budget`, and each curve is produced by ONE compiled
-`simulate(...)` call with in-jit eval (`eval_every`) instead of the old
-per-segment host loop.
+Runs on the batched sweep engine (`repro.api.simulate_sweep`): every
+method's whole seed batch is ONE compiled device call — the per-seed
+states are vmapped through the fused nested scan with in-jit eval, so
+adding seeds costs batched GEMMs, not extra dispatches. `--seeds 1`
+reproduces the single-seed curves bit-for-bit (row 0 of a seed sweep
+equals the solo `simulate()` run; tests/test_sweep.py pins this).
 
-  PYTHONPATH=src python -m benchmarks.fig3_convergence --task emnist
+  PYTHONPATH=src python -m benchmarks.fig3_convergence --task emnist --seeds 4
 """
 from __future__ import annotations
 
@@ -19,8 +20,9 @@ import json
 import os
 
 import jax
+import numpy as np
 
-from repro.api import get_algorithm, make_context, simulate, steps_for_budget
+from repro.api import get_algorithm, make_context, simulate_sweep, steps_for_budget
 from repro.configs.draco_paper import TASKS
 from repro.core.baselines import BASELINES
 from repro.core.channel import ChannelConfig
@@ -50,15 +52,27 @@ def setup(task_name: str, seed: int = 0, num_clients: int = None):
     return cfg, train, test, params0, loss, acc, k3
 
 
+def seed_keys(key, seeds: int):
+    """The sweep's stacked key rows: `seeds == 1` keeps the base key
+    itself (bit-for-bit the pre-sweep single-run behavior), more seeds
+    split it."""
+    return key[None] if seeds <= 1 else jax.random.split(key, seeds)
+
+
+def _discard(state):
+    """final_fn: the figure only reads the trace."""
+    return ()
+
+
 def run(task_name="emnist", segments=8, seg_windows=100, seg_rounds=None,
-        seed=0, num_clients=None, out_dir="results"):
+        seed=0, num_clients=None, out_dir="results", seeds=1):
     """Compute-matched comparison: every method gets the same expected
     number of local gradient computations per client per segment
-    (`steps_for_budget`). Each method runs as a single fused
-    `simulate(...)` scan sampling accuracy every segment in-jit."""
+    (`steps_for_budget`). Each method's seed batch runs as a single
+    vmapped `simulate_sweep(...)` scan sampling accuracy in-jit; curves
+    are seed-means."""
     cfg, train, test, params0, loss, acc, key = setup(task_name, seed, num_clients)
-    mean_acc = lambda params: float(
-        jax.vmap(lambda p: acc(p, test[0], test[1]))(params).mean())
+    keys = seed_keys(key, seeds)
 
     # per-segment compute budget = DRACO's expected grads over one segment
     budget = seg_windows * get_algorithm("draco").grads_per_step(cfg)
@@ -66,6 +80,9 @@ def run(task_name="emnist", segments=8, seg_windows=100, seg_rounds=None,
     # one shared context: graph, weight matrices and flat-plane layout
     # built once for all methods
     ctx = make_context(cfg, loss, train, params0=params0)
+    # every method starts from params0 replicated across clients (and
+    # push weights of 1), so the step-0 accuracy is one plain eval
+    acc0 = float(acc(params0, test[0], test[1]))
     curves = {}
     for name in ("draco",) + tuple(BASELINES):
         algo = get_algorithm(name)
@@ -73,20 +90,19 @@ def run(task_name="emnist", segments=8, seg_windows=100, seg_rounds=None,
             per_seg = seg_windows
         else:
             per_seg = seg_rounds or steps_for_budget(name, cfg, budget)
-        st = algo.init(key, cfg, params0)
-        acc0 = mean_acc(algo.eval_params(st))
-        st, trace = simulate(algo, cfg, params0, loss, train,
-                             num_steps=segments * per_seg, key=key,
-                             eval_every=per_seg, eval_fn=acc,
-                             eval_data=test, ctx=ctx, state=st)
-        curves[name] = [acc0] + [float(a) for a in trace.metrics["accuracy"]]
+        _, trace = simulate_sweep(algo, cfg, params0, loss, train,
+                                  num_steps=segments * per_seg, keys=keys,
+                                  eval_every=per_seg, eval_fn=acc,
+                                  eval_data=test, ctx=ctx, final_fn=_discard)
+        seed_mean = np.asarray(trace.metrics["accuracy"][0]).mean(axis=0)
+        curves[name] = [acc0] + [float(a) for a in seed_mean]
 
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"fig3_{task_name}.json")
     with open(path, "w") as f:
         json.dump({"task": task_name, "topology": cfg.topology,
                    "curves": curves}, f, indent=1)
-    print(f"# Fig3 ({task_name}, {cfg.topology} topology) -> {path}")
+    print(f"# Fig3 ({task_name}, {cfg.topology} topology, {seeds} seed(s)) -> {path}")
     print("method,final_acc,best_acc")
     for m, c in curves.items():
         print(f"{m},{c[-1]:.4f},{max(c):.4f}")
@@ -99,5 +115,8 @@ if __name__ == "__main__":
     ap.add_argument("--segments", type=int, default=8)
     ap.add_argument("--clients", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="seed rows of the vmapped sweep (curves are means)")
     a = ap.parse_args()
-    run(a.task, segments=a.segments, seed=a.seed, num_clients=a.clients)
+    run(a.task, segments=a.segments, seed=a.seed, num_clients=a.clients,
+        seeds=a.seeds)

@@ -5,10 +5,13 @@ Expected trends (paper Sec. 5): tiny Psi starves aggregation and slows
 learning; very large Psi wastes communication with no accuracy gain and
 can oscillate.
 
-Each Psi point is ONE fused `repro.api.simulate` call with in-jit
-accuracy sampling (`eval_every`) — no per-segment host round-trips.
+The WHOLE grid — every Psi point x every seed — is ONE compiled
+`repro.api.simulate_sweep` call: Psi rides the scanned config axis as a
+*traced* override (one trace for the whole sweep, no per-Psi recompile),
+seeds ride the vmapped axis, and accuracy samples in-jit. Each grid cell
+is bit-for-bit the solo `simulate()` run with that (Psi, seed).
 
-  PYTHONPATH=src python -m benchmarks.fig4_psi_sweep --task emnist
+  PYTHONPATH=src python -m benchmarks.fig4_psi_sweep --task emnist --seeds 4
 """
 from __future__ import annotations
 
@@ -17,38 +20,47 @@ import json
 import os
 
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.fig3_convergence import setup
-from repro.api import make_context, simulate
+from benchmarks.fig3_convergence import seed_keys, setup
+from repro.api import make_context, simulate_sweep
+
+
+def _total_accept(state):
+    """final_fn: the sweep only needs the per-run message counters."""
+    return state.total_accept
 
 
 def run(task_name="emnist", psis=(1, 2, 4, 8, 24), windows=600, seed=0,
-        num_clients=None, out_dir="results", segments=6):
+        num_clients=None, out_dir="results", segments=6, seeds=1):
     cfg0, train, test, params0, loss, acc, key = setup(task_name, seed, num_clients)
     seg_w = max(1, windows // segments)
-    # graph/weights/flat layout built once; per-psi runs rebind only the
-    # static config
-    ctx0 = make_context(cfg0, loss, train, params0=params0)
+    grid = [cfg0.replace(psi=int(p)) for p in psis]
+    # graph/weights/flat layout built once; the sweep re-binds psi as a
+    # traced scalar per scanned grid row
+    ctx = make_context(grid[0], loss, train, params0=params0)
+    keys = seed_keys(key, seeds)
+    accepted, trace = simulate_sweep(
+        "draco", grid, params0, loss, train, num_steps=segments * seg_w,
+        keys=keys, eval_every=seg_w, eval_fn=acc, eval_data=test, ctx=ctx,
+        final_fn=_total_accept)  # accepted: (G, K, N)
+
     results = {}
-    for psi in psis:
-        cfg = cfg0.replace(psi=int(psi))
-        st, trace = simulate("draco", cfg, params0, loss, train,
-                             num_steps=segments * seg_w, key=key,
-                             eval_every=seg_w, eval_fn=acc, eval_data=test,
-                             ctx=ctx0.replace(cfg=cfg))
-        accs = [float(a) for a in trace.metrics["accuracy"]]
+    for g, psi in enumerate(psis):
+        accs = [float(a) for a in
+                np.asarray(trace.metrics["accuracy"][g]).mean(axis=0)]
         results[int(psi)] = {
             "final_acc": accs[-1],
             "best_acc": max(accs),
             "acc_curve": accs,
-            "msgs": int(st.total_accept.sum()),
+            "msgs": int(np.asarray(accepted[g]).sum(axis=-1).mean()),
             "osc": float(jnp.std(jnp.diff(jnp.asarray(accs[2:])))) if len(accs) > 3 else 0.0,
         }
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"fig4_{task_name}.json")
     with open(path, "w") as f:
         json.dump(results, f, indent=1)
-    print(f"# Fig4 Psi sweep ({task_name}) -> {path}")
+    print(f"# Fig4 Psi sweep ({task_name}, {seeds} seed(s)) -> {path}")
     print("psi,final_acc,best_acc,oscillation")
     for psi, r in results.items():
         print(f"{psi},{r['final_acc']:.4f},{r['best_acc']:.4f},{r['osc']:.4f}")
@@ -60,5 +72,6 @@ if __name__ == "__main__":
     ap.add_argument("--task", default="emnist")
     ap.add_argument("--windows", type=int, default=600)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seeds", type=int, default=1)
     a = ap.parse_args()
-    run(a.task, windows=a.windows, seed=a.seed)
+    run(a.task, windows=a.windows, seed=a.seed, seeds=a.seeds)

@@ -11,11 +11,14 @@ like task with the paper wireless channel:
     paper's "manageable instructions for stragglers" claim under the
     decoupled computation schedule.
 
-Each point is ONE fused `repro.api.simulate` call with in-jit accuracy +
-consensus sampling. Writes `results/fig_dynamic_{task}.json` and mirrors
-final-point scalars to `BENCH_scenarios.json` (uploaded as a CI artifact
-next to `BENCH_gossip.json`, so the scenario-robustness trajectory is
-tracked across PRs).
+Each sweep family is ONE compiled `repro.api.simulate_sweep` call: the
+per-point schedules are tree-stacked along the scanned scenario axis
+(same ring shapes within a family), seeds ride the vmapped axis, and
+accuracy + consensus sample in-jit. Writes
+`results/fig_dynamic_{task}.json` and mirrors final-point scalars to
+`BENCH_scenarios.json` (uploaded as a CI artifact next to
+`BENCH_gossip.json`, so the scenario-robustness trajectory is tracked
+across PRs).
 
   PYTHONPATH=src python -m benchmarks.fig_dynamic --task emnist
   PYTHONPATH=src python -m benchmarks.fig_dynamic --quick   # CI-sized
@@ -27,56 +30,71 @@ import json
 import os
 
 import jax
+import numpy as np
 
-from benchmarks.fig3_convergence import setup
-from repro.api import make_context, simulate
+from benchmarks.fig3_convergence import seed_keys, setup
+from repro.api import make_context, simulate_sweep
+from repro.scenarios import make_schedule
 
 CHURNS = (0.0, 0.05, 0.2, 0.5)
 FRACS = (0.0, 0.2, 0.5)
 
 
-def _one_run(salt, cfg, params0, loss, train, test, acc, key, windows,
-             segments, scenario, scenario_kwargs):
-    ctx = make_context(cfg, loss, train, params0=params0, scenario=scenario,
-                       scenario_key=jax.random.fold_in(key, salt),
-                       scenario_kwargs=scenario_kwargs)
+def _total_accept(state):
+    return state.total_accept
+
+
+def _sweep_family(cfg, params0, loss, train, test, acc, key, keys, windows,
+                  segments, scenario, salts, kwargs_list, ctx):
+    """One scenario family (shared generator, varying knobs) as one
+    sweep call over the stacked-schedule grid axis."""
+    scheds = [make_schedule(scenario, cfg, key=jax.random.fold_in(key, salt),
+                            **kw) for salt, kw in zip(salts, kwargs_list)]
     seg_w = max(1, windows // segments)
-    st, trace = simulate("draco", cfg, params0, loss, train,
-                         num_steps=segments * seg_w, key=key,
-                         eval_every=seg_w, eval_fn=acc, eval_data=test,
-                         ctx=ctx)
-    accs = [float(a) for a in trace.metrics["accuracy"]]
-    cons = [float(c) for c in trace.metrics["consensus"]]
-    return {
-        "final_acc": accs[-1],
-        "best_acc": max(accs),
-        "final_consensus": cons[-1],
-        "acc_curve": accs,
-        "consensus_curve": cons,
-        "msgs": int(st.total_accept.sum()),
-    }
+    accepted, trace = simulate_sweep(
+        "draco", cfg, params0, loss, train, num_steps=segments * seg_w,
+        keys=keys, eval_every=seg_w, eval_fn=acc, eval_data=test,
+        schedules=scheds, ctx=ctx, final_fn=_total_accept)
+    rows = []
+    for g in range(len(scheds)):
+        accs = [float(a) for a in
+                np.asarray(trace.metrics["accuracy"][g]).mean(axis=0)]
+        cons = [float(c) for c in
+                np.asarray(trace.metrics["consensus"][g]).mean(axis=0)]
+        rows.append({
+            "final_acc": accs[-1],
+            "best_acc": max(accs),
+            "final_consensus": cons[-1],
+            "acc_curve": accs,
+            "consensus_curve": cons,
+            "msgs": int(np.asarray(accepted[g]).sum(axis=-1).mean()),
+        })
+    return rows
 
 
 def run(task_name="emnist", windows=240, segments=6, seed=0, num_clients=None,
         churns=CHURNS, fracs=FRACS, sched_steps=32, out_dir="results",
-        bench_json="BENCH_scenarios.json", quick=False):
+        bench_json="BENCH_scenarios.json", quick=False, seeds=1):
     if quick:
         windows, segments, num_clients = 60, 3, num_clients or 8
         churns, fracs, sched_steps = (0.0, 0.2), (0.0, 0.5), 12
     cfg, train, test, params0, loss, acc, key = setup(task_name, seed,
                                                       num_clients)
-    results = {"churn": {}, "straggler": {}}
-    for i, churn in enumerate(churns):
-        results["churn"][float(churn)] = _one_run(
-            i, cfg, params0, loss, train, test, acc, key,
-            windows, segments, "markov-edge-flip",
-            {"steps": sched_steps, "churn": float(churn)})
-    for i, frac in enumerate(fracs):
-        results["straggler"][float(frac)] = _one_run(
-            100 + i, cfg, params0, loss, train, test, acc, key,
-            windows, segments, "straggler-profile",
-            {"steps": sched_steps, "straggler_frac": float(frac),
-             "slowdown": 10.0, "duty": 0.5})
+    ctx = make_context(cfg, loss, train, params0=params0)
+    keys = seed_keys(key, seeds)
+    churn_rows = _sweep_family(
+        cfg, params0, loss, train, test, acc, key, keys, windows, segments,
+        "markov-edge-flip", range(len(churns)),
+        [{"steps": sched_steps, "churn": float(c)} for c in churns], ctx)
+    strag_rows = _sweep_family(
+        cfg, params0, loss, train, test, acc, key, keys, windows, segments,
+        "straggler-profile", [100 + i for i in range(len(fracs))],
+        [{"steps": sched_steps, "straggler_frac": float(f),
+          "slowdown": 10.0, "duty": 0.5} for f in fracs], ctx)
+    results = {
+        "churn": {float(c): r for c, r in zip(churns, churn_rows)},
+        "straggler": {float(f): r for f, r in zip(fracs, strag_rows)},
+    }
 
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"fig_dynamic_{task_name}.json")
@@ -106,7 +124,8 @@ if __name__ == "__main__":
     ap.add_argument("--windows", type=int, default=240)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--clients", type=int, default=None)
+    ap.add_argument("--seeds", type=int, default=1)
     ap.add_argument("--quick", action="store_true")
     a = ap.parse_args()
     run(a.task, windows=a.windows, seed=a.seed, num_clients=a.clients,
-        quick=a.quick)
+        quick=a.quick, seeds=a.seeds)

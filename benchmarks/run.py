@@ -143,6 +143,100 @@ def bench_simulate_fused(quick=False):
     emit(f"segment_loop_W{windows}_N{n}", us_l, "legacy-path")
 
 
+def _sweep_total_accept(state):
+    return state.total_accept
+
+
+def bench_sweep(quick=False, json_path="BENCH_sweep.json"):
+    """Sweep-engine acceptance bench: an 8-seed x 6-config Psi grid at
+    N=25 run (a) as ONE `simulate_sweep` device call and (b) as the
+    per-cell Python loop it replaces (`simulate` per (config, seed) —
+    which recompiles per config, since every distinct `DracoConfig` is a
+    fresh static jit key). Wall clock is end-to-end *including*
+    compilation — exactly the cost a fig3/fig4 grid run pays — plus
+    steady-state (pre-compiled) timings for the dispatch-only view.
+
+    The per-cell math is identical FLOPs on both paths, so the task is
+    deliberately small (25 clients, ~3k-param MLP): what this bench
+    isolates is the *grid driver* — 1 compile + 1 dispatch vs 6 compiles
+    + 48 dispatch/sync round-trips. (At the full ~146k-param fig3 model
+    the same grid is compute-bound and the sweep's edge shrinks to the
+    batching gain, ~1.3x end-to-end on CPU — see EXPERIMENTS.md.)
+    Writes BENCH_sweep.json; the PR-4 acceptance bar is >= 2x end-to-end
+    on CPU."""
+    import json as json_lib
+    import time
+
+    from repro.api import make_context, simulate, simulate_sweep
+    from repro.core.channel import ChannelConfig
+    from repro.core.protocol import DracoConfig
+    from repro.data.synthetic import federated_classification, make_mlp
+
+    n, seeds = 25, 8
+    psis = (1, 2, 4, 8, 16, 24)
+    windows = 8 if quick else 24
+    every = 4 if quick else 8
+    key = jax.random.PRNGKey(0)
+    k1, k2, key = jax.random.split(key, 3)
+    train, test = federated_classification(k1, n, input_dim=16,
+                                           num_classes=5, per_client=64)
+    params0, _, loss, acc = make_mlp(k2, 16, (32,), 5)
+    cfg0 = DracoConfig(num_clients=n, lr=0.05, local_batches=1, batch_size=16,
+                       lambda_grad=0.3, lambda_tx=0.3, unify_period=50,
+                       topology="cycle", max_delay_windows=4,
+                       channel=ChannelConfig(message_bytes=13_000,
+                                             gamma_max=10.0))
+    grid = [cfg0.replace(psi=int(p)) for p in psis]
+    keys = jax.random.split(key, seeds)
+    ctx = make_context(grid[0], loss, train, params0=params0)
+
+    def sweep_once():
+        _, trace = simulate_sweep(
+            "draco", grid, params0, loss, train, windows, keys=keys,
+            eval_every=every, eval_fn=acc, eval_data=test, ctx=ctx,
+            final_fn=_sweep_total_accept)
+        return trace  # numpy: already blocked on device results
+
+    def loop_once():
+        out = []
+        for cfg in grid:
+            ctx_g = ctx.replace(cfg=cfg)
+            for k in keys:
+                _, tr = simulate("draco", cfg, params0, loss, train, windows,
+                                 key=k, eval_every=every, eval_fn=acc,
+                                 eval_data=test, ctx=ctx_g)
+                out.append(tr.metrics["accuracy"])
+        return out
+
+    t0 = time.perf_counter()
+    sweep_once()
+    sweep_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    loop_once()
+    loop_s = time.perf_counter() - t0
+    # steady state: both paths now hit their jit caches
+    sweep_steady = time_fn(sweep_once, warmup=0, iters=2) / 1e6
+    loop_steady = time_fn(loop_once, warmup=0, iters=2) / 1e6
+
+    emit(f"sweep_grid_{seeds}x{len(psis)}_N{n}_W{windows}", sweep_s * 1e6,
+         f"end2end_speedup_vs_loop={loop_s / sweep_s:.2f}x")
+    emit(f"sweep_loop_{seeds}x{len(psis)}_N{n}_W{windows}", loop_s * 1e6,
+         "python-loop-path")
+    emit(f"sweep_grid_steady_{seeds}x{len(psis)}_N{n}", sweep_steady * 1e6,
+         f"steady_speedup_vs_loop={loop_steady / sweep_steady:.2f}x")
+    if json_path:
+        with open(json_path, "w") as f:
+            json_lib.dump({
+                "grid": f"{seeds}seeds_x_{len(psis)}configs",
+                "num_clients": n, "windows": windows, "eval_every": every,
+                "sweep_s": sweep_s, "loop_s": loop_s,
+                "speedup": loop_s / sweep_s,
+                "sweep_steady_s": sweep_steady, "loop_steady_s": loop_steady,
+                "steady_speedup": loop_steady / sweep_steady,
+            }, f, indent=1, sort_keys=True)
+        print(f"# wrote {json_path}")
+
+
 def bench_fig3(quick=False):
     """Fig. 3 (both panels): DRACO vs baselines final accuracy."""
     from benchmarks.fig3_convergence import run
@@ -206,6 +300,7 @@ BENCHES = {
     "ssd": bench_ssd,
     "draco_window": bench_draco_window,
     "simulate_fused": bench_simulate_fused,
+    "sweep": bench_sweep,
     "fig3": bench_fig3,
     "fig4": bench_fig4,
     "fig_dynamic": bench_fig_dynamic,

@@ -9,6 +9,9 @@ One simulator for DRACO and every baseline:
                             eval_fn=acc, eval_data=test)
     print(trace.metrics["accuracy"])   # sampled in-jit, no host loop
 
+Whole experiment grids (seeds x configs x scenarios) batch into one
+compiled call via `simulate_sweep` (see `repro.api.sweep`).
+
 New methods register with `@register_algorithm("name")` and implement
 `init/step/eval_params/grads_per_step` (see `repro.api.algorithm`).
 """
@@ -25,6 +28,7 @@ from repro.api.simulate import (
     simulate,
     steps_for_budget,
 )
+from repro.api.sweep import SweepTrace, simulate_sweep
 
 # importing the module registers the built-in algorithms
 from repro.api import algorithms  # noqa: F401
@@ -40,5 +44,7 @@ __all__ = [
     "make_context",
     "register_algorithm",
     "simulate",
+    "simulate_sweep",
+    "SweepTrace",
     "steps_for_budget",
 ]

@@ -38,6 +38,9 @@ class Draco:
     """Paper Algorithm 1/2: decoupled Poisson grad/tx events, row-
     stochastic gossip with Psi cap, delay ring-buffer, unification."""
 
+    # config fields the sweep engine may re-bind as traced scalars
+    sweepable = ("lr", "lambda_grad", "lambda_tx", "psi")
+
     def init(self, key, cfg, params0):
         return protocol_lib.init_state(key, cfg, params0)
 
@@ -47,6 +50,7 @@ class Draco:
             state, ctx.cfg, v.q, v.adj, ctx.loss_fn, ctx.data,
             spec=ctx.flat_spec, positions=v.positions,
             compute_rate=v.compute_rate, tx_rate=v.tx_rate,
+            overrides=ctx.overrides,
         )
 
     def eval_params(self, state):
@@ -60,8 +64,16 @@ class Draco:
 class _Baseline:
     """Shared init for the four baselines (BaselineState + positions)."""
 
+    # baselines consume cfg.lr only (via local_updates); the Poisson-rate
+    # and Psi knobs are DRACO-specific
+    sweepable = ("lr",)
+
     def init(self, key, cfg, params0):
         return baselines_lib.init_baseline_state(key, cfg, params0)
+
+    @staticmethod
+    def _lr(ctx):
+        return None if ctx.overrides is None else ctx.overrides.lr
 
     def eval_params(self, state):
         return baselines_lib.eval_params(self.name, state)
@@ -79,6 +91,7 @@ class SyncSymm(_Baseline):
         return baselines_lib.sync_symm_round(
             state, ctx.cfg, v.w_sym, v.adj, ctx.loss_fn, ctx.data,
             positions=v.positions, compute_rate=v.compute_rate,
+            lr=self._lr(ctx),
         )
 
 
@@ -91,6 +104,7 @@ class SyncPush(_Baseline):
         state, _ = baselines_lib.sync_push_round(
             state, ctx.cfg, v.adj, ctx.loss_fn, ctx.data,
             positions=v.positions, compute_rate=v.compute_rate,
+            lr=self._lr(ctx),
         )
         return state
 
@@ -104,7 +118,7 @@ class AsyncSymm(_Baseline):
         return baselines_lib.async_symm_round(
             state, ctx.cfg, v.w_sym, v.adj, ctx.loss_fn, ctx.data,
             p_active=P_ACTIVE, positions=v.positions,
-            compute_rate=v.compute_rate,
+            compute_rate=v.compute_rate, lr=self._lr(ctx),
         )
 
     def grads_per_step(self, cfg):
@@ -120,7 +134,7 @@ class AsyncPush(_Baseline):
         state, _ = baselines_lib.async_push_round(
             state, ctx.cfg, v.adj, ctx.loss_fn, ctx.data,
             p_active=P_ACTIVE, positions=v.positions,
-            compute_rate=v.compute_rate,
+            compute_rate=v.compute_rate, lr=self._lr(ctx),
         )
         return state
 

@@ -12,8 +12,8 @@ construction happens **once** per run instead of once per method (the
 legacy `run_baseline` rebuilt the graph inside every jit).
 
 `SimContext` is registered as a pytree: `(q, adj, w_sym, data,
-positions, schedule)` are traced children, while `(cfg, loss_fn,
-flat_spec)` ride as static aux data. Passing a context through
+positions, schedule, overrides)` are traced children, while `(cfg,
+loss_fn, flat_spec)` ride as static aux data. Passing a context through
 `jax.jit` therefore recompiles only when the config, loss function,
 parameter layout or schedule *structure* changes, exactly like the
 legacy `static_argnames=("cfg", "loss_fn")` entry points.
@@ -34,13 +34,18 @@ from repro.core.topology import metropolis
 @jax.tree_util.register_pytree_node_class
 class SimContext:
     """Immutable bundle of (cfg, loss_fn, q, adj, w_sym, data, positions,
-    flat_spec, schedule)."""
+    flat_spec, schedule, overrides).
+
+    `overrides` is a `repro.core.protocol.Overrides` of traced config
+    re-bindings (lr/lambda/psi), set per grid row by the sweep engine;
+    None (the default everywhere else) is the plain static-config path.
+    """
 
     __slots__ = ("cfg", "loss_fn", "q", "adj", "w_sym", "data", "positions",
-                 "flat_spec", "schedule")
+                 "flat_spec", "schedule", "overrides")
 
     def __init__(self, cfg, loss_fn, q, adj, w_sym, data, positions=None,
-                 flat_spec=None, schedule=None):
+                 flat_spec=None, schedule=None, overrides=None):
         object.__setattr__(self, "cfg", cfg)
         object.__setattr__(self, "loss_fn", loss_fn)
         object.__setattr__(self, "q", q)
@@ -50,6 +55,7 @@ class SimContext:
         object.__setattr__(self, "positions", positions)
         object.__setattr__(self, "flat_spec", flat_spec)
         object.__setattr__(self, "schedule", schedule)
+        object.__setattr__(self, "overrides", overrides)
 
     def __setattr__(self, name, value):
         raise AttributeError("SimContext is immutable")
@@ -61,16 +67,16 @@ class SimContext:
 
     def tree_flatten(self):
         children = (self.q, self.adj, self.w_sym, self.data, self.positions,
-                    self.schedule)
+                    self.schedule, self.overrides)
         aux = (self.cfg, self.loss_fn, self.flat_spec)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         cfg, loss_fn, flat_spec = aux
-        q, adj, w_sym, data, positions, schedule = children
+        q, adj, w_sym, data, positions, schedule, overrides = children
         return cls(cfg, loss_fn, q, adj, w_sym, data, positions, flat_spec,
-                   schedule)
+                   schedule, overrides)
 
     def __repr__(self):
         n = self.q.shape[0] if self.q is not None else "?"

@@ -37,11 +37,13 @@ class SimTrace(NamedTuple):
 
     `step[k]` is the 1-indexed step count after which `metrics[...][k]`
     was measured; empty arrays when `eval_every == 0`. The arrays have
-    exactly `num_steps // eval_every` rows — metrics are only ever
-    materialized at the sampled steps (see `_run`).
+    `num_steps // eval_every` rows, plus one final row at `num_steps`
+    when `num_steps % eval_every != 0` — the trace always reflects the
+    end-of-run model (see `_run`). `step` is int32 everywhere (empty and
+    scanned traces alike).
     """
 
-    step: np.ndarray  # (num_evals,) int
+    step: np.ndarray  # (num_evals,) int32
     metrics: Dict[str, np.ndarray]  # each (num_evals,) float
 
 
@@ -67,8 +69,8 @@ def _metrics(algo, state, eval_fn, eval_data):
     return out
 
 
-@partial(jax.jit, static_argnames=("algo", "num_steps", "eval_every", "eval_fn"))
-def _run(algo, ctx, state, eval_data, num_steps: int, eval_every: int, eval_fn):
+def _run_body(algo, ctx, state, eval_data, num_steps: int, eval_every: int,
+              eval_fn):
     """One fused scan over `num_steps` protocol steps + in-jit eval.
 
     Nested scan: an outer scan over the `num_steps // eval_every` eval
@@ -77,8 +79,14 @@ def _run(algo, ctx, state, eval_data, num_steps: int, eval_every: int, eval_fn):
     a dense `(num_steps,)` carry that is mostly thrown away host-side
     (the pre-PR2 `lax.cond` sampling traced every step: ~8 bytes/metric/
     step of wasted HBM and a scan carry that grew with the eval cadence
-    ignored). Leftover steps past the last eval point run in a trailing
-    metric-free scan."""
+    ignored). The `num_steps % eval_every` leftover steps past the last
+    eval point run in a trailing metric-free scan followed by one final
+    metrics row at step `num_steps`, so the trace always reflects the
+    end-of-run model.
+
+    Un-jitted on purpose: `_run` wraps it for solo `simulate` calls, and
+    `repro.api.sweep` nests it under vmap (seed axis) and scan (config
+    axis) inside its own jit."""
 
     def step_only(s, _):
         return algo.step(s, ctx), None
@@ -98,7 +106,16 @@ def _run(algo, ctx, state, eval_data, num_steps: int, eval_every: int, eval_fn):
                                 jnp.arange(chunks, dtype=jnp.int32))
     if rem:
         state, _ = jax.lax.scan(step_only, state, None, length=rem)
+        last = dict(_metrics(algo, state, eval_fn, eval_data),
+                    step=jnp.asarray(num_steps, jnp.int32))
+        trace = jax.tree_util.tree_map(
+            lambda rows, row: jnp.concatenate(
+                [rows, row[None].astype(rows.dtype)]), trace, last)
     return state, trace
+
+
+_run = jax.jit(_run_body,
+               static_argnames=("algo", "num_steps", "eval_every", "eval_fn"))
 
 
 def simulate(
@@ -132,8 +149,9 @@ def simulate(
       key: PRNGKey for state init (required unless `state` is given).
       eval_every: sample metrics every k steps, on device, via a nested
         scan that materializes one metrics row per sample (the trace is
-        `(num_steps // eval_every,)` — nothing is traced at the other
-        steps); 0 disables in-jit eval entirely.
+        `(num_steps // eval_every,)`, plus a final row at `num_steps`
+        when the division leaves a remainder — nothing is traced at the
+        other steps); 0 disables in-jit eval entirely.
       eval_fn: `metric(params_i, ex, ey) -> scalar` (e.g. accuracy);
         vmapped over clients and averaged. Requires `eval_data`.
       eval_data: held-out `(ex, ey)` for `eval_fn`.
@@ -185,7 +203,7 @@ def simulate(
                       int(eval_every), eval_fn)
 
     if raw is None:
-        return state, SimTrace(np.zeros((0,), np.int64), {})
+        return state, SimTrace(np.zeros((0,), np.int32), {})
     step = np.asarray(raw["step"])
     metrics = {k: np.asarray(v) for k, v in raw.items() if k != "step"}
     return state, SimTrace(step, metrics)

@@ -109,7 +109,7 @@ def _mix_rows(w, params):
 
 
 def sync_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data, *,
-                    positions=None, compute_rate=None):
+                    positions=None, compute_rate=None, lr=None):
     """D-SGD with Metropolis weights; dropped links' mass folds into self.
 
     A scenario compute-rate ring turns into a per-round completion
@@ -119,7 +119,7 @@ def sync_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data, *,
     n = cfg.num_clients
     all_on = jnp.ones((n,), bool)
     k_next, k_g, k_c, on = _sync_round_keys(state, n, compute_rate)
-    delta = local_updates(k_g, state.params, on, cfg, loss_fn, data)
+    delta = local_updates(k_g, state.params, on, cfg, loss_fn, data, lr=lr)
     params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
     succ = _link_success(k_c, state, cfg, adj, all_on, positions=positions)
     succ = succ & succ.T  # symmetric methods need bidirectional links
@@ -131,12 +131,12 @@ def sync_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data, *,
 
 
 def sync_push_round(state: BaselineState, cfg, adj, loss_fn, data, *,
-                    positions=None, compute_rate=None):
+                    positions=None, compute_rate=None, lr=None):
     """Synchronous push-sum (stochastic gradient push, Assran et al.)."""
     n = cfg.num_clients
     all_on = jnp.ones((n,), bool)
     k_next, k_g, k_c, on = _sync_round_keys(state, n, compute_rate)
-    delta = local_updates(k_g, state.params, on, cfg, loss_fn, data)
+    delta = local_updates(k_g, state.params, on, cfg, loss_fn, data, lr=lr)
     params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
     succ = _link_success(k_c, state, cfg, adj, all_on, positions=positions)
     # column-stochastic P: sender splits mass over (self + successful out-links)
@@ -156,7 +156,7 @@ def sync_push_round(state: BaselineState, cfg, adj, loss_fn, data, *,
 
 def async_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data,
                      p_active: float = 0.5, *, positions=None,
-                     compute_rate=None):
+                     compute_rate=None, lr=None):
     """Async decentralized SGD w/ delay deadline [15]: only a random subset
     is active per round; symmetric mixing among surviving active links.
     A scenario compute-rate ring scales each client's activation
@@ -164,7 +164,7 @@ def async_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data,
     n = cfg.num_clients
     k_next, k_a, k_g, k_c = jax.random.split(state.key, 4)
     active = _participation(k_a, n, p_active, compute_rate)
-    delta = local_updates(k_g, state.params, active, cfg, loss_fn, data)
+    delta = local_updates(k_g, state.params, active, cfg, loss_fn, data, lr=lr)
     params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
     succ = _link_success(k_c, state, cfg, adj, active, positions=positions)
     succ = succ & succ.T & active[:, None] & active[None, :]
@@ -176,13 +176,13 @@ def async_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data,
 
 def async_push_round(state: BaselineState, cfg, adj, loss_fn, data,
                      p_active: float = 0.5, *, positions=None,
-                     compute_rate=None):
+                     compute_rate=None, lr=None):
     """Asynchronous push-sum gossip (Digest-style [50]): active clients
     push half their mass, split across successful out-neighbors."""
     n = cfg.num_clients
     k_next, k_a, k_g, k_c = jax.random.split(state.key, 4)
     active = _participation(k_a, n, p_active, compute_rate)
-    delta = local_updates(k_g, state.params, active, cfg, loss_fn, data)
+    delta = local_updates(k_g, state.params, active, cfg, loss_fn, data, lr=lr)
     params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
     succ = _link_success(k_c, state, cfg, adj, active, positions=positions)
     out = succ.astype(jnp.float32)

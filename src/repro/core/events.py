@@ -44,9 +44,24 @@ class Event:
     kind: str  # "grad" | "tx" | "unify"
 
 
+def unify_hub(k: int, n: int) -> int:
+    """Hub of the k-th unification (k = 1, 2, ...) under the rotating-hub
+    rule shared with the compiled window engine: `protocol._unify` fires
+    at the end of window `widx = k*P - 1` with
+    ``hub = (widx // P) % n = (k - 1) % n``."""
+    return (k - 1) % n
+
+
 def event_list(rng: np.random.Generator, n: int, horizon: float,
-               lam_grad, lam_tx, unify_period: float = 0.0) -> List[Event]:
-    """Exact merged continuous-time event list (Algorithm 2 lines 1-15)."""
+               lam_grad, lam_tx, unify_period: float = 0.0,
+               random_hub: bool = False) -> List[Event]:
+    """Exact merged continuous-time event list (Algorithm 2 lines 1-15).
+
+    Unification hubs rotate deterministically (`unify_hub`), matching the
+    compiled window engine (`protocol._unify`) so the two unification
+    views agree event-for-event; `random_hub=True` restores the legacy
+    uniform-random hub draw (one extra rng consumption per unification).
+    """
     lam_grad = np.broadcast_to(np.asarray(lam_grad, np.float64), (n,))
     lam_tx = np.broadcast_to(np.asarray(lam_tx, np.float64), (n,))
     events: List[Event] = []
@@ -61,7 +76,7 @@ def event_list(rng: np.random.Generator, n: int, horizon: float,
     if unify_period and unify_period > 0:
         k = 1
         while k * unify_period < horizon:
-            hub = int(rng.integers(0, n))
+            hub = int(rng.integers(0, n)) if random_hub else unify_hub(k, n)
             events.append(Event(float(k * unify_period), hub, "unify"))
             k += 1
     events.sort(key=lambda e: e.t)

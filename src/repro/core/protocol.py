@@ -49,6 +49,7 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import channel as channel_lib
 from repro.core import flat as flat_lib
@@ -74,8 +75,45 @@ class DracoConfig:
     apply_self_update: bool = False  # paper: senders do NOT apply own Delta
     channel: Optional[ChannelConfig] = None
 
+    def __post_init__(self):
+        if self.num_clients <= 0:
+            raise ValueError(
+                f"num_clients must be positive, got {self.num_clients}")
+        if self.window <= 0:
+            raise ValueError(
+                f"window must be positive, got {self.window}")
+        if self.max_delay_windows < 2:
+            # the drain walks ages 1..D-1; D < 2 leaves no in-flight slot
+            # and the ring silently degenerates to "nothing ever arrives"
+            raise ValueError(
+                "max_delay_windows must be >= 2 (depth-D ring holds D-1 "
+                f"in-flight windows), got {self.max_delay_windows}")
+        if self.psi < 0:
+            raise ValueError(
+                f"psi must be >= 0 (0 = unbounded), got {self.psi}")
+        if self.unify_period < 0:
+            raise ValueError(
+                f"unify_period must be >= 0 (0 = never), got {self.unify_period}")
+
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
+
+
+class Overrides(NamedTuple):
+    """Traced per-run overrides of sweepable `DracoConfig` fields.
+
+    The sweep engine (`repro.api.sweep`) re-binds these inside one
+    compiled call, so an lr/Psi/lambda grid shares a single trace instead
+    of recompiling per config. `None` fields fall back to the static
+    config value — an all-None `Overrides` is bit-for-bit the plain
+    config path. `psi` follows the config convention: values <= 0 mean
+    unbounded reception.
+    """
+
+    lr: Optional[jax.Array] = None
+    lambda_grad: Optional[jax.Array] = None
+    lambda_tx: Optional[jax.Array] = None
+    psi: Optional[jax.Array] = None
 
 
 class DracoState(NamedTuple):
@@ -114,16 +152,20 @@ def init_state(key, cfg: DracoConfig, params0) -> DracoState:
     )
 
 
-def local_updates(key, params, grad_mask, cfg, loss_fn, data):
-    """Per-client B-batch local SGD; returns Delta pytree (N, ...)."""
+def local_updates(key, params, grad_mask, cfg, loss_fn, data, *, lr=None):
+    """Per-client B-batch local SGD; returns Delta pytree (N, ...).
+
+    `lr`, when given, is a traced learning-rate override (config sweeps);
+    None keeps the static `cfg.lr` bit-for-bit."""
     xs, ys = data
     n = cfg.num_clients
+    lr = cfg.lr if lr is None else lr
 
     def one_client(p_i, key_i, x_i, y_i):
         def body(p, k):
             idx = jax.random.randint(k, (cfg.batch_size,), 0, x_i.shape[0])
             g = jax.grad(loss_fn)(p, x_i[idx], y_i[idx])
-            return jax.tree_util.tree_map(lambda a, b: a - cfg.lr * b, p, g), None
+            return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g), None
 
         keys = jax.random.split(key_i, cfg.local_batches)
         y_b, _ = jax.lax.scan(body, p_i, keys)
@@ -137,15 +179,24 @@ def local_updates(key, params, grad_mask, cfg, loss_fn, data):
     )
 
 
-def _psi_accept(key, success, accept_count, psi: int):
+def _psi_accept(key, success, accept_count, psi):
     """Per-(sender, receiver) acceptance under the Psi cap.
 
     Random sender priority; receiver j accepts while its period count +
-    rank < psi. Returns (accept mask (N,N), new accept_count)."""
+    rank < psi. Returns (accept mask (N,N), new accept_count).
+
+    `psi` may be a static int (the config path) or a traced int scalar
+    (config sweeps). A traced psi <= 0 encodes "unbounded" via a cap no
+    run can reach, which reproduces the static unbounded path bit-for-bit
+    (the rank test degenerates to `arrivals > 0`)."""
     n = success.shape[0]
     arrivals = success.astype(jnp.int32)
-    if psi <= 0:
-        return success, accept_count + arrivals.sum(axis=0)
+    if isinstance(psi, (int, np.integer)):
+        if psi <= 0:
+            return success, accept_count + arrivals.sum(axis=0)
+    else:
+        psi = jnp.where(psi <= 0, jnp.iinfo(jnp.int32).max // 2,
+                        psi.astype(jnp.int32))
     perm = jax.random.permutation(key, n)  # sender priority order
     inv = jnp.argsort(perm)
     s_perm = arrivals[perm]  # reorder senders
@@ -156,32 +207,52 @@ def _psi_accept(key, success, accept_count, psi: int):
     return ok & success, new_count
 
 
+def quantize_delays(gamma, window: float, max_delay_windows: int):
+    """Per-link delay in superposition windows + deliverability mask.
+
+    ``delay_w = clip(ceil(gamma / window), 1, D-1)`` routes each link
+    through the depth-D ring; a link whose true delay spans >= D windows
+    cannot be delivered from the ring at its actual age, so it is
+    **dropped** (channel-outage semantics) rather than silently delivered
+    early at age D-1 — the exact boundary ``gamma = (D-1) * window`` is
+    still deliverable. Returns (delay_w (N,N) int32, deliverable (N,N)
+    bool)."""
+    raw = jnp.ceil(gamma / window).astype(jnp.int32)  # >= 1 typically
+    deliverable = raw <= max_delay_windows - 1
+    return jnp.clip(raw, 1, max_delay_windows - 1), deliverable
+
+
 def _tx_and_accept(state, cfg, q, adj, k_tx, k_chan, k_psi, positions=None,
-                   tx_rate=None):
+                   tx_rate=None, overrides=None):
     """Transmission events + channel + Psi cap (shared by both engines).
 
     `positions`/`tx_rate`, when given (scenario schedules), override the
     state-carried node coordinates and scale the per-client Poisson tx
-    rate; None means the frozen-path behavior, bit-for-bit.
+    rate; None means the frozen-path behavior, bit-for-bit. `overrides`
+    (an `Overrides`) re-binds lambda_tx/psi with traced values for the
+    sweep engine.
 
     Returns (tx_mask (N,), w_eff (N,N), delay_w (N,N) int32,
     accept_count, total_accept)."""
     n, D = cfg.num_clients, cfg.max_delay_windows
-    lam_tx = cfg.lambda_tx if tx_rate is None else cfg.lambda_tx * tx_rate
+    ov = overrides or Overrides()
+    lam_tx = cfg.lambda_tx if ov.lambda_tx is None else ov.lambda_tx
+    if tx_rate is not None:
+        lam_tx = lam_tx * tx_rate
     tx_mask = sample_event_masks(k_tx, lam_tx, cfg.window, n)
     if cfg.channel is not None and cfg.channel.enabled:
         pos = state.positions if positions is None else positions
         gamma, success = channel_lib.transmission_delays(
             k_chan, pos, tx_mask, cfg.channel
         )
-        delay_w = jnp.ceil(gamma / cfg.window).astype(jnp.int32)  # >= 1 typ.
-        delay_w = jnp.clip(delay_w, 1, D - 1)
-        success = success & adj
+        delay_w, deliverable = quantize_delays(gamma, cfg.window, D)
+        success = success & deliverable & adj
     else:
         success = adj & tx_mask[:, None]
         delay_w = jnp.ones((n, n), jnp.int32)
 
-    accept, accept_count = _psi_accept(k_psi, success, state.accept_count, cfg.psi)
+    psi = cfg.psi if ov.psi is None else ov.psi
+    accept, accept_count = _psi_accept(k_psi, success, state.accept_count, psi)
     # cumulative counter survives the periodic accept_count reset
     total_accept = state.total_accept + (accept_count - state.accept_count)
     w_eff = q * accept.astype(q.dtype)  # (sender, receiver)
@@ -205,7 +276,7 @@ def _unify(params, accept_count, widx, cfg, n):
 
 def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data,
                  spec=None, *, positions=None, compute_rate=None,
-                 tx_rate=None):
+                 tx_rate=None, overrides=None):
     """One superposition window on the fused gossip engine.
 
     Bit-for-bit equal to `draco_window_legacy` at f32 (the parity suite
@@ -222,8 +293,13 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data,
     grad/transmission rates (straggler profiles modulate the decoupled
     computation schedule without touching the comms schedule). All
     default to None == the frozen-graph path, bit-for-bit.
+
+    `overrides` (an `Overrides`) re-binds lr/lambda/psi with *traced*
+    scalars — the sweep engine's config axis; None fields keep the
+    static config values bit-for-bit.
     """
     n, D = cfg.num_clients, cfg.max_delay_windows
+    ov = overrides or Overrides()
     keys = jax.random.split(state.key, 8)
     k_next, k_grad, k_gsel, k_tx, k_chan, k_psi, k_hub, _ = keys
     widx = state.window_idx
@@ -246,9 +322,12 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data,
     )
 
     # --- 2. gradient events ------------------------------------------------
-    lam_g = cfg.lambda_grad if compute_rate is None else cfg.lambda_grad * compute_rate
+    lam_g = cfg.lambda_grad if ov.lambda_grad is None else ov.lambda_grad
+    if compute_rate is not None:
+        lam_g = lam_g * compute_rate
     grad_mask = sample_event_masks(k_grad, lam_g, cfg.window, n)
-    delta = local_updates(k_gsel, params, grad_mask, cfg, loss_fn, data)
+    delta = local_updates(k_gsel, params, grad_mask, cfg, loss_fn, data,
+                          lr=ov.lr)
     pending = state.pending + flat_lib.ravel_clients(delta)
     if cfg.apply_self_update:
         params = jax.tree_util.tree_map(
@@ -258,7 +337,7 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data,
     # --- 3. transmission events + channel ----------------------------------
     tx_mask, w_eff, delay_w, accept_count, total_accept = _tx_and_accept(
         state, cfg, q, adj, k_tx, k_chan, k_psi, positions=positions,
-        tx_rate=tx_rate,
+        tx_rate=tx_rate, overrides=overrides,
     )
 
     # enqueue: write this window's broadcast (payload + per-link metadata)
@@ -391,9 +470,11 @@ def draco_window_legacy(state: DracoStateLegacy, cfg: DracoConfig, q, adj,
         gamma, success = channel_lib.transmission_delays(
             k_chan, state.positions, tx_mask, cfg.channel
         )
-        delay_w = jnp.ceil(gamma / cfg.window).astype(jnp.int32)  # >= 1 typ.
-        delay_w = jnp.clip(delay_w, 1, D - 1)
-        success = success & adj
+        delay_raw = jnp.ceil(gamma / cfg.window).astype(jnp.int32)  # >= 1 typ.
+        delay_w = jnp.clip(delay_raw, 1, D - 1)
+        # a link spanning >= D windows cannot live in a depth-D ring:
+        # dropped (outage), never delivered early at age D-1
+        success = success & (delay_raw <= D - 1) & adj
     else:
         success = adj & tx_mask[:, None]
         delay_w = jnp.ones((n, n), jnp.int32)

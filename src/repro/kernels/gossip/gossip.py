@@ -102,12 +102,15 @@ def gossip_drain_pallas(w_stack, payloads, *, block_d: int = 512,
                         interpret: bool = False, out_dtype=jnp.float32):
     """Fused multi-window drain: ``out = sum_j w_stack[j]^T @ payloads[j]``.
 
-    w_stack (J, N, N) f32; payloads (J, N, K) with K % block_d == 0 —
-    one stored broadcast per ring slot, in *chronological* (oldest-first)
-    order so the f32 accumulation matches the seed ring-buffer order.
-    Every payload byte moves HBM->VMEM exactly once per window.
+    w_stack (J, N, M) f32 — senders x receivers, square (M == N) on the
+    single-device path, rectangular when a client shard drains its
+    N-senders slice against all M receivers (`ops.gossip_drain_sharded`);
+    payloads (J, N, K) with K % block_d == 0 — one stored broadcast per
+    ring slot, in *chronological* (oldest-first) order so the f32
+    accumulation matches the seed ring-buffer order. Every payload byte
+    moves HBM->VMEM exactly once per window. Returns (M, K).
     """
-    j_total, n, _ = w_stack.shape
+    j_total, n, m = w_stack.shape
     assert payloads.shape[:2] == (j_total, n)
     k_total = payloads.shape[2]
     assert k_total % block_d == 0, (k_total, block_d)
@@ -116,10 +119,10 @@ def gossip_drain_pallas(w_stack, payloads, *, block_d: int = 512,
         _drain_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((j_total, n, n), lambda i: (0, 0, 0)),  # VMEM resident
+            pl.BlockSpec((j_total, n, m), lambda i: (0, 0, 0)),  # VMEM resident
             pl.BlockSpec((j_total, n, block_d), lambda i: (0, 0, i)),
         ],
-        out_specs=pl.BlockSpec((n, block_d), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((n, k_total), out_dtype),
+        out_specs=pl.BlockSpec((m, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, k_total), out_dtype),
         interpret=interpret,
     )(w_stack, payloads)

@@ -98,10 +98,12 @@ def gossip_drain(w_stack, ring, slots, *, block_d: int = 512, use_kernel=None,
                  interpret=None):
     """Fused delay-bucketed drain: ``sum_j w_stack[j]^T @ ring[slots[j]]``.
 
-    w_stack (J, N, N): masked weights per stored broadcast, stacked
-    oldest-first; ring (S, N, K): the payload ring buffer; slots (J,):
-    ring rows aligned with ``w_stack`` (oldest first).  Returns the f32
-    (N, K) aggregate of everything arriving this window.
+    w_stack (J, N, M): masked weights per stored broadcast, stacked
+    oldest-first — square (M == N) on the single-device path,
+    rectangular (a senders slice against all M receivers) under
+    `gossip_drain_sharded`; ring (S, N, K): the payload ring buffer;
+    slots (J,): ring rows aligned with ``w_stack`` (oldest first).
+    Returns the f32 (M, K) aggregate of everything arriving this window.
 
     The f32 accumulation runs in chronological order, so the result is
     bit-for-bit what the seed ring buffer would have accumulated slot by
@@ -114,7 +116,8 @@ def gossip_drain(w_stack, ring, slots, *, block_d: int = 512, use_kernel=None,
     """
     if use_kernel is None:
         use_kernel = default_use_kernel()
-    n, k = ring.shape[1], ring.shape[2]
+    m = w_stack.shape[2]  # receivers (== senders except per-shard slices)
+    k = ring.shape[2]
     j_total = w_stack.shape[0]
     if use_kernel:
         if interpret is None:
@@ -123,8 +126,8 @@ def gossip_drain(w_stack, ring, slots, *, block_d: int = 512, use_kernel=None,
         wp = _pad_to(_pad_to(w_stack.astype(jnp.float32), 8, 1), 8, 2)
         pp = _pad_to(_pad_to(payloads, 8, 1), block_d, 2)
         out = gossip_drain_pallas(wp, pp, block_d=block_d, interpret=interpret)
-        return out[:n, :k]
-    out = jnp.zeros((n, k), jnp.float32)
+        return out[:m, :k]
+    out = jnp.zeros((m, k), jnp.float32)
     for j in range(j_total):
         w_j = w_stack[j].astype(jnp.float32)
 
@@ -134,3 +137,61 @@ def gossip_drain(w_stack, ring, slots, *, block_d: int = 512, use_kernel=None,
 
         out = jax.lax.cond(jnp.any(w_j != 0), _acc, lambda o: o, out)
     return out
+
+
+def gossip_drain_sharded(w_stack, ring, slots, mesh, client_axes, *,
+                         block_d: int = 512, use_kernel=None, interpret=None):
+    """Client-sharded drain: per-device tiles + one `psum_scatter`.
+
+    The explicit `shard_map` lowering of the sweep engine's sharded
+    gossip contraction: the payload ring is sharded over the *sender*
+    axis (each device holds its clients' stored broadcasts), every
+    device runs `gossip_drain` on its `(J, N_loc, N)` weight slice —
+    the Pallas grid on TPU, the unrolled-GEMM fallback elsewhere — and a
+    single ``lax.psum_scatter`` over the *receiver* axis both sums the
+    per-device partials and leaves each device holding exactly its own
+    clients' aggregate (no all-reduce, no gather).
+
+    w_stack (J, N, N) and ring (S, N, K) are both sharded on their
+    *sender* axis (axis 1) over `client_axes` (a mesh axis name or
+    tuple, e.g. the `sharding/axes.py` "clients" rule) — each device
+    holds a rectangular (J, N_loc, N) weight slice and its senders'
+    payloads; slots (J,) is replicated. N must divide the client mesh
+    size. Returns the (N, K) f32 aggregate, sharded on axis 0.
+
+    The per-receiver sum is re-associated across devices (psum order),
+    so the result matches `gossip_drain` up to f32 reduction order —
+    exact when every sender bucket lives on one device.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.mixing import _resolve_shard_map
+
+    shard_map = _resolve_shard_map()
+    axes = client_axes if isinstance(client_axes, tuple) else (client_axes,)
+    # one name for both roles: PartitionSpec entry and collective axis
+    ax = axes if len(axes) > 1 else axes[0]
+    ndev = 1
+    for a in axes:
+        ndev *= mesh.shape[a]
+    n = ring.shape[1]
+    if n % ndev:
+        raise ValueError(f"client count {n} not divisible by mesh client "
+                         f"size {ndev}")
+
+    def body(w, r, s):
+        # w (J, N_loc, N): this device's senders against all receivers
+        partial_full = gossip_drain(w, r, s, block_d=block_d,
+                                    use_kernel=use_kernel,
+                                    interpret=interpret)  # (N, K)
+        # sum partials across devices AND keep only our receiver rows
+        return jax.lax.psum_scatter(partial_full, ax,
+                                    scatter_dimension=0, tiled=True)
+
+    # check_rep=False: pallas_call has no shard_map replication rule (the
+    # kernel path would otherwise raise NotImplementedError); the output
+    # spec is exact — psum_scatter leaves each device its receiver rows
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(None, ax, None), P(None, ax, None), P()),
+                   out_specs=P(ax, None), check_rep=False)
+    return fn(w_stack, ring, slots)

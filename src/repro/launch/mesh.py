@@ -26,6 +26,18 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     return jax.make_mesh(shape, axes)
 
 
+def make_sweep_mesh(num_data: int | None = None):
+    """Mesh for `repro.api.sweep.simulate_sweep(..., mesh=...)`: every
+    device on the "data" axis (the `sharding/axes.py` "clients" rule maps
+    the DRACO client axis onto it), trivial "model" axis — protocol
+    sweeps are client-parallel, not tensor-parallel. `num_data` defaults
+    to all visible devices; the client count N must be divisible by it
+    for the axis to actually shard (`specs.filter_divisible` falls back
+    to replicated otherwise)."""
+    n = num_data if num_data is not None else len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
 def client_axes(mesh) -> tuple:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 

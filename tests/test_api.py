@@ -173,6 +173,43 @@ def test_eval_every_zero_skips_trace(task):
     assert int(st.window_idx) == 4
 
 
+def test_final_partial_chunk_eval_row(task):
+    """`num_steps % eval_every` trailing steps end with a metrics row at
+    step `num_steps`, so the trace reflects the end-of-run model (the
+    pre-PR4 driver ran them metric-free and under-reported every run
+    whose horizon wasn't a multiple of the cadence)."""
+    train, test, params0, loss, acc = task
+    cfg = _cfg()
+    key = jax.random.PRNGKey(4)
+    st, trace = simulate("draco", cfg, params0, loss, train, 10, key=key,
+                         eval_every=4, eval_fn=acc, eval_data=test)
+    assert list(trace.step) == [4, 8, 10]
+    # the final row is measured on the returned final state
+    final_acc = float(jax.vmap(lambda p: acc(p, test[0], test[1]))(
+        st.params).mean())
+    np.testing.assert_allclose(trace.metrics["accuracy"][-1], final_acc,
+                               rtol=1e-6)
+    # fewer steps than the cadence -> exactly one row, at num_steps
+    st2, trace2 = simulate("draco", cfg, params0, loss, train, 3, key=key,
+                           eval_every=4, eval_fn=acc, eval_data=test)
+    assert list(trace2.step) == [3]
+
+
+def test_trace_step_dtype_unified(task):
+    """SimTrace.step is int32 for empty, scanned, and appended rows."""
+    train, test, params0, loss, acc = task
+    cfg = _cfg()
+    key = jax.random.PRNGKey(4)
+    _, empty = simulate("draco", cfg, params0, loss, train, 2, key=key)
+    assert empty.step.dtype == np.int32
+    _, exact = simulate("draco", cfg, params0, loss, train, 8, key=key,
+                        eval_every=4, eval_fn=acc, eval_data=test)
+    assert exact.step.dtype == np.int32 and list(exact.step) == [4, 8]
+    _, ragged = simulate("draco", cfg, params0, loss, train, 9, key=key,
+                         eval_every=4, eval_fn=acc, eval_data=test)
+    assert ragged.step.dtype == np.int32 and list(ragged.step) == [4, 8, 9]
+
+
 def test_resume_from_state_without_key(task):
     """Resuming from an existing state needs no PRNGKey; two chained
     simulate calls equal one long run (scan is state-threaded)."""

@@ -5,6 +5,7 @@ import numpy as np
 from repro.core.events import (
     event_list,
     sample_event_masks,
+    unify_hub,
     window_event_probs,
 )
 
@@ -42,6 +43,44 @@ def test_event_list_sorted_and_rates():
         mean = 10 * 500 * lam
         assert abs(got - mean) < 4 * np.sqrt(mean)
     assert len(unifies) == 9  # 50,100,...,450
+
+
+def test_event_list_hub_matches_window_engine():
+    """The exact timeline's unification hubs follow the SAME rotating
+    rule as the compiled window engine (`protocol._unify` at the end of
+    window `k*P - 1` picks `(widx // P) % n`): the two unification views
+    agree event-for-event, incl. rotation wrap-around."""
+    from repro.core.protocol import DracoConfig, _unify
+
+    n, P = 4, 3
+    rng = np.random.default_rng(0)
+    evs = event_list(rng, n=n, horizon=10 * P + 0.5, lam_grad=0.1, lam_tx=0.1,
+                     unify_period=float(P))
+    hubs = [e.client for e in evs if e.kind == "unify"]
+    assert len(hubs) == 10
+    assert hubs == [unify_hub(k, n) for k in range(1, 11)]
+    assert hubs[:5] == [0, 1, 2, 3, 0]  # deterministic rotation + wrap
+
+    cfg = DracoConfig(num_clients=n, unify_period=P)
+    for k in range(1, 11):
+        widx = jnp.asarray(k * P - 1, jnp.int32)
+        params = {"w": jnp.arange(n, dtype=jnp.float32)[:, None] + 100 * k}
+        out, cnt = _unify(params, jnp.ones((n,), jnp.int32), widx, cfg, n)
+        adopted = int(out["w"][0, 0]) - 100 * k  # all rows == the hub row
+        assert (np.asarray(out["w"]) == np.asarray(out["w"][0])).all()
+        assert adopted == hubs[k - 1], (k, adopted, hubs[k - 1])
+        assert int(cnt.sum()) == 0  # unification resets the Psi counters
+
+
+def test_event_list_random_hub_flag():
+    """`random_hub=True` keeps the legacy uniform-random hub draw."""
+    rng = np.random.default_rng(1)
+    evs = event_list(rng, n=7, horizon=500.0, lam_grad=0.0, lam_tx=0.0,
+                     unify_period=5.0, random_hub=True)
+    hubs = [e.client for e in evs if e.kind == "unify"]
+    assert len(hubs) == 99
+    assert all(0 <= h < 7 for h in hubs)
+    assert hubs != [unify_hub(k, 7) for k in range(1, 100)]
 
 
 def test_event_list_per_client_independence():

@@ -141,3 +141,24 @@ def test_enqueue_buckets_sum_to_full_mix():
     full = gossip_mix_ref(w_stack.sum(0), pending)
     np.testing.assert_allclose(np.asarray(out.sum(0)), np.asarray(full),
                                atol=1e-4, rtol=1e-4)
+
+
+def test_drain_rectangular_weights_both_paths():
+    """A client shard drains its senders slice against ALL receivers:
+    w (J, N_loc, M) rectangular (the `gossip_drain_sharded` per-device
+    shape). Both the Pallas path and the XLA fallback must return the
+    full (M, K) aggregate — the kernel path used to assume square
+    weights and silently truncated to (N_loc, K)."""
+    key = jax.random.PRNGKey(11)
+    J, S, n_loc, m, k = 3, 4, 8, 16, 37
+    w = jax.random.normal(key, (J, n_loc, m))
+    ring = jax.random.normal(jax.random.fold_in(key, 1), (S, n_loc, k))
+    slots = jnp.array([1, 3, 0])
+    ref = np.zeros((m, k), np.float32)
+    for j, s in enumerate([1, 3, 0]):
+        ref = ref + np.asarray(w[j]).T @ np.asarray(ring[s])
+    fallback = gossip_drain(w, ring, slots, use_kernel=False)
+    kernel = gossip_drain(w, ring, slots, use_kernel=True, interpret=True)
+    assert fallback.shape == kernel.shape == (m, k)
+    np.testing.assert_allclose(np.asarray(fallback), ref, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(kernel), ref, atol=1e-5, rtol=1e-5)

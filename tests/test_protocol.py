@@ -148,3 +148,108 @@ def test_virtual_global_model(task):
     for l0, lv in zip(jax.tree_util.tree_leaves(params0),
                       jax.tree_util.tree_leaves(vg)):
         np.testing.assert_allclose(np.asarray(l0), np.asarray(lv), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Config validation (PR 4): degenerate knobs fail loudly at construction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw,msg", [
+    (dict(num_clients=0), "num_clients"),
+    (dict(num_clients=-3), "num_clients"),
+    (dict(window=0.0), "window"),
+    (dict(window=-1.0), "window"),
+    (dict(max_delay_windows=1), "max_delay_windows"),
+    (dict(psi=-1), "psi"),
+    (dict(unify_period=-5), "unify_period"),
+])
+def test_config_validation_rejects(kw, msg):
+    with pytest.raises(ValueError, match=msg):
+        _cfg(**kw)
+
+
+def test_config_validation_accepts_boundaries():
+    _cfg(max_delay_windows=2, psi=0, unify_period=0)  # all legal minima
+
+
+# ---------------------------------------------------------------------------
+# Over-delay delivery bugfix (PR 4): a link whose true delay spans >= D
+# windows is DROPPED (channel-outage semantics), never delivered early
+# at age D-1. The exact boundary gamma = (D-1)*window stays deliverable.
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_delays_boundary():
+    from repro.core.protocol import quantize_delays
+
+    D, w = 4, 0.5
+    gamma = jnp.array([[0.01, (D - 1) * w],         # 1 window | exact boundary
+                       [(D - 1) * w + 1e-4, 10.0]])  # just past | way past
+    delay_w, deliverable = quantize_delays(gamma, w, D)
+    np.testing.assert_array_equal(np.asarray(delay_w),
+                                  [[1, D - 1], [D - 1, D - 1]])
+    np.testing.assert_array_equal(np.asarray(deliverable),
+                                  [[True, True], [False, False]])
+
+
+def _fixed_channel_state_and_cfg(gamma_rows, window=1.0, D=4):
+    """A protocol state + cfg whose channel draws are pinned to
+    `gamma_rows` (monkeypatched transmission_delays)."""
+    cfg = _cfg(window=window, max_delay_windows=D, lambda_tx=1e9,
+               channel=ChannelConfig(gamma_max=1e9))
+    return cfg
+
+
+def test_over_delay_links_are_dropped(task, monkeypatch):
+    """w_eff zeros exactly the links whose quantized delay >= D, in both
+    the fused `_tx_and_accept` and the legacy engine's inline path."""
+    from repro.core import channel as channel_lib
+    from repro.core import protocol as protocol_lib
+
+    train, _, params0, loss, _ = task
+    D, w = 4, 1.0
+    n = N
+    cfg = _fixed_channel_state_and_cfg(None, window=w, D=D)
+    # pinned per-link delays: row 0 at the exact (D-1)*w boundary
+    # (deliverable), row 1 just past it (dropped), everything else fast
+    gamma = np.full((n, n), 0.5, np.float64)
+    gamma[0, :] = (D - 1) * w
+    gamma[1, :] = (D - 1) * w + 1e-3
+
+    def fixed_delays(key, pos, tx_mask, chan_cfg):
+        g = jnp.asarray(gamma, jnp.float32)
+        return g, (g <= chan_cfg.gamma_max) & tx_mask[:, None]
+
+    monkeypatch.setattr(channel_lib, "transmission_delays", fixed_delays)
+
+    q, adj = build_graph(cfg)
+    key = jax.random.PRNGKey(0)
+    st = init_state(key, cfg, params0)
+    keys = jax.random.split(st.key, 8)
+    tx_mask, w_eff, delay_w, _, _ = protocol_lib._tx_and_accept(
+        st, cfg, q, adj, keys[3], keys[4], keys[5])
+    assert bool(tx_mask.all())  # lambda_tx huge: everyone transmits
+    w_eff = np.asarray(w_eff)
+    adj_np = np.asarray(adj)
+    # boundary row delivered at max age, over-delay row fully dropped
+    assert (w_eff[0][adj_np[0]] > 0).all()
+    np.testing.assert_array_equal(w_eff[1], np.zeros((n,)))
+    assert (np.asarray(delay_w)[0][adj_np[0]] == D - 1).all()
+
+    # legacy engine drops the same links: its buffer never receives
+    # payload mass from sender 1
+    st_l = protocol_lib.init_state_legacy(key, cfg, params0)
+    st_l2 = protocol_lib.draco_window_legacy(st_l, cfg, q, adj, loss, train)
+    st_f2 = protocol_lib.draco_window(st, cfg, q, adj, loss, train)
+    flat_legacy = np.concatenate(
+        [np.asarray(b).reshape(D, n, -1)
+         for b in jax.tree_util.tree_leaves(st_l2.buffer)], axis=-1)
+    # fused ring stores raw payloads; mix them per-slot to compare the
+    # delivered mass with the legacy pre-mixed buffer
+    for age in range(1, D):
+        slot = age % D  # widx=0: messages of delay d land in slot d
+        w_age = np.asarray(st_f2.w_ring[0]) * (
+            np.asarray(st_f2.delay_ring[0]) == age)
+        mixed = w_age.T @ np.asarray(st_f2.buffer[0])
+        np.testing.assert_allclose(flat_legacy[slot], mixed, atol=1e-6)

@@ -1,0 +1,182 @@
+"""Sweep-engine parity: every grid cell == the solo `simulate()` run.
+
+The acceptance bar for the batched sweep engine: row `(g, k)` of a
+`simulate_sweep` call must be **bit-identical** (f32) to a solo
+`simulate()` with config `g` / seed `k` on one device — across the
+vmapped seed axis, the scanned traced-override config axis (incl. the
+psi<=0 "unbounded" encoding), the stacked-schedule scenario axis, and
+for baselines as well as DRACO."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import make_context, simulate, simulate_sweep
+from repro.api.sweep import SWEEPABLE, stack_configs
+from repro.core.channel import ChannelConfig
+from repro.core.protocol import DracoConfig
+from repro.data.synthetic import federated_classification, make_mlp
+
+N = 5
+
+
+@pytest.fixture(scope="module")
+def task():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    train, test = federated_classification(k1, N, input_dim=6, num_classes=3,
+                                           per_client=64)
+    params0, apply, loss, acc = make_mlp(k2, 6, (8,), 3)
+    return train, test, params0, loss, acc
+
+
+def _cfg(**kw):
+    base = dict(num_clients=N, lr=0.1, local_batches=1, batch_size=8,
+                lambda_grad=0.8, lambda_tx=0.8, unify_period=10, psi=2,
+                topology="complete", max_delay_windows=3, channel=None)
+    base.update(kw)
+    return DracoConfig(**base)
+
+
+KEYS = jax.random.split(jax.random.PRNGKey(42), 2)
+
+
+def _assert_cell_equal(solo_state, finals, g, k):
+    for a, b in zip(jax.tree_util.tree_leaves(solo_state.params),
+                    jax.tree_util.tree_leaves(finals.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b[g, k]))
+
+
+def test_seed_axis_bitwise_parity_draco(task):
+    """vmapped seed rows == solo runs, wireless channel + Psi cap on,
+    incl. the trace (with its final partial-chunk row)."""
+    train, test, params0, loss, acc = task
+    cfg = _cfg(channel=ChannelConfig(message_bytes=51_640, gamma_max=10.0))
+    finals, trace = simulate_sweep("draco", cfg, params0, loss, train, 10,
+                                   keys=KEYS, eval_every=4, eval_fn=acc,
+                                   eval_data=test)
+    assert trace.metrics["accuracy"].shape == (1, len(KEYS), 3)
+    assert list(trace.step) == [4, 8, 10]
+    for k, key in enumerate(KEYS):
+        solo, solo_tr = simulate("draco", cfg, params0, loss, train, 10,
+                                 key=key, eval_every=4, eval_fn=acc,
+                                 eval_data=test)
+        _assert_cell_equal(solo, finals, 0, k)
+        np.testing.assert_array_equal(np.asarray(solo_tr.metrics["accuracy"]),
+                                      trace.metrics["accuracy"][0, k])
+        np.testing.assert_array_equal(np.asarray(solo.total_accept),
+                                      np.asarray(finals.total_accept[0, k]))
+
+
+def test_config_axis_bitwise_parity(task):
+    """Traced lr/psi overrides == static-config solo runs, including the
+    psi=0 row (the unbounded encoding must match the static fast path)."""
+    train, test, params0, loss, acc = task
+    grid = [_cfg(psi=0, lr=0.1), _cfg(psi=2, lr=0.1), _cfg(psi=3, lr=0.05)]
+    finals, trace = simulate_sweep("draco", grid, params0, loss, train, 8,
+                                   keys=KEYS, eval_every=4, eval_fn=acc,
+                                   eval_data=test)
+    assert trace.metrics["accuracy"].shape == (3, len(KEYS), 2)
+    for g, cfg in enumerate(grid):
+        solo, _ = simulate("draco", cfg, params0, loss, train, 8, key=KEYS[1],
+                           eval_every=4, eval_fn=acc, eval_data=test)
+        _assert_cell_equal(solo, finals, g, 1)
+
+
+@pytest.mark.parametrize("method", ["sync-push"])
+def test_baseline_parity(method, task):
+    """A baseline rides the same engine: seed axis + lr config axis."""
+    train, test, params0, loss, acc = task
+    grid = [_cfg(topology="cycle", lr=0.1), _cfg(topology="cycle", lr=0.02)]
+    finals, _ = simulate_sweep(method, grid, params0, loss, train, 6,
+                               keys=KEYS)
+    for g, cfg in enumerate(grid):
+        for k, key in enumerate(KEYS):
+            solo, _ = simulate(method, cfg, params0, loss, train, 6, key=key)
+            _assert_cell_equal(solo, finals, g, k)
+            np.testing.assert_array_equal(
+                np.asarray(solo.push_weight),
+                np.asarray(finals.push_weight[g, k]))
+
+
+def test_dynamic_scenario_parity(task):
+    """Stacked-schedule grid rows == solo runs with per-point contexts."""
+    from repro.scenarios import make_schedule
+
+    train, test, params0, loss, acc = task
+    cfg = _cfg()
+    key = jax.random.PRNGKey(3)
+    scheds = [make_schedule("markov-edge-flip", cfg,
+                            key=jax.random.fold_in(key, i), steps=6, churn=c)
+              for i, c in enumerate((0.1, 0.4))]
+    finals, _ = simulate_sweep("draco", cfg, params0, loss, train, 8,
+                               keys=KEYS, schedules=scheds)
+    for g, sched in enumerate(scheds):
+        ctx = make_context(cfg, loss, train, params0=params0, scenario=sched)
+        solo, _ = simulate("draco", cfg, params0, loss, train, 8, key=KEYS[0],
+                           ctx=ctx)
+        _assert_cell_equal(solo, finals, g, 0)
+
+
+def test_final_fn_slims_output(task):
+    train, test, params0, loss, acc = task
+    grid = [_cfg(psi=1), _cfg(psi=2)]
+
+    finals, _ = simulate_sweep("draco", grid, params0, loss, train, 4,
+                               keys=KEYS, final_fn=_take_accept)
+    assert finals.shape == (2, len(KEYS), N)
+    assert finals.dtype == jnp.int32
+
+
+def _take_accept(state):
+    return state.total_accept
+
+
+def test_stack_configs_detects_swept_fields():
+    grid = [_cfg(psi=1, lr=0.1), _cfg(psi=4, lr=0.1)]
+    base, ov = stack_configs(grid)
+    assert base == grid[0]
+    assert ov.lr is None and ov.lambda_grad is None
+    np.testing.assert_array_equal(np.asarray(ov.psi), [1, 4])
+    assert ov.psi.dtype == jnp.int32
+    assert set(SWEEPABLE) == {"lr", "lambda_grad", "lambda_tx", "psi"}
+
+
+def test_rejects_nonsweepable_grid(task):
+    train, _, params0, loss, _ = task
+    with pytest.raises(ValueError, match="non-sweepable"):
+        simulate_sweep("draco", [_cfg(), _cfg(topology="cycle")], params0,
+                       loss, train, 2, keys=KEYS)
+
+
+def test_rejects_identical_config_grid(task):
+    train, _, params0, loss, _ = task
+    with pytest.raises(ValueError, match="no field varies"):
+        simulate_sweep("draco", [_cfg(psi=1), _cfg(psi=1)], params0, loss,
+                       train, 2, keys=KEYS)
+
+
+def test_rejects_field_algo_ignores(task):
+    train, _, params0, loss, _ = task
+    with pytest.raises(ValueError, match="does not consume"):
+        simulate_sweep("sync-push", [_cfg(psi=1), _cfg(psi=2)], params0,
+                       loss, train, 2, keys=KEYS)
+
+
+def test_rejects_mismatched_grid_axes(task):
+    from repro.scenarios import make_schedule
+
+    train, _, params0, loss, _ = task
+    cfg = _cfg()
+    scheds = [make_schedule("markov-edge-flip", cfg,
+                            key=jax.random.PRNGKey(i), steps=4, churn=0.2)
+              for i in range(3)]
+    with pytest.raises(ValueError, match="grid axes disagree"):
+        simulate_sweep("draco", [cfg.replace(psi=1), cfg.replace(psi=2)],
+                       params0, loss, train, 2, keys=KEYS, schedules=scheds)
+
+
+def test_requires_keys(task):
+    train, _, params0, loss, _ = task
+    with pytest.raises(ValueError, match="keys"):
+        simulate_sweep("draco", _cfg(), params0, loss, train, 2)
