@@ -29,27 +29,61 @@ from repro.core.channel import ChannelConfig
 from repro.core.protocol import DracoConfig
 
 
-def setup(task_name: str, seed: int = 0, num_clients: int = None):
-    from repro.data.synthetic import federated_classification, make_mlp
+def setup(task_name: str, seed: int = 0, num_clients: int = None,
+          optimizer: str = "sgd"):
+    """Build (cfg, train, test, params0, workload, eval_fn, key).
 
-    t = TASKS[task_name]
-    n = num_clients or t.num_clients
+    `task_name` is either a paper preset (`TASKS`: "emnist"/"poker" —
+    the pre-task-layer make_mlp path, bit-for-bit) or a `repro.tasks`
+    registry name ("linear-softmax", "mlp", "small-cnn", "tiny-lm").
+    For registry tasks the returned workload slot is the `Task` itself
+    (feed it to `simulate`'s loss position or `task=`), `optimizer`
+    selects its local update rule, and the wireless message size is
+    derived from the model's actual f32 byte count.
+    """
     key = jax.random.PRNGKey(seed)
     k1, k2, k3 = jax.random.split(key, 3)
-    train, test = federated_classification(
-        k1, n, input_dim=t.input_dim, num_classes=t.num_classes,
-        per_client=t.samples_per_client)
-    params0, apply, loss, acc = make_mlp(k2, t.input_dim, t.hidden, t.num_classes)
-    topology = "cycle" if task_name == "emnist" else "complete"
-    chan = ChannelConfig(message_bytes=t.message_bytes, gamma_max=10.0)
+    if task_name in TASKS:
+        from repro.data.synthetic import federated_classification, make_mlp
+
+        t = TASKS[task_name]
+        n = num_clients or t.num_clients
+        train, test = federated_classification(
+            k1, n, input_dim=t.input_dim, num_classes=t.num_classes,
+            per_client=t.samples_per_client)
+        params0, apply, loss, acc = make_mlp(k2, t.input_dim, t.hidden,
+                                             t.num_classes)
+        if optimizer != "sgd":
+            raise ValueError(
+                f"paper preset {task_name!r} is the legacy plain-SGD "
+                "path; use a task-registry name to swap optimizers")
+        workload, eval_fn = loss, acc
+        topology = "cycle" if task_name == "emnist" else "complete"
+        message_bytes, lr = t.message_bytes, t.lr
+        local_batches, batch_size, lambda_grad = (t.local_batches,
+                                                  t.batch_size, t.lambda_grad)
+    else:
+        from repro.tasks import get_task
+
+        task = get_task(task_name, optimizer=optimizer)
+        n = num_clients or 25
+        params0, train, test = task.setup(
+            jax.random.fold_in(jax.random.PRNGKey(seed), 1), n)
+        workload, eval_fn = task, task.eval_fn
+        topology = "cycle"
+        message_bytes = 4 * sum(
+            int(np.prod(np.shape(l)))
+            for l in jax.tree_util.tree_leaves(params0))
+        lr, local_batches, batch_size, lambda_grad = 0.05, 1, 64, 0.1
+    chan = ChannelConfig(message_bytes=message_bytes, gamma_max=10.0)
     # psi scales with in-degree (fig4 sweeps it explicitly); cycle has 2
     # in-neighbors, complete has n-1 — a fixed tiny cap starves complete.
     psi = 6 if topology == "cycle" else 0
-    cfg = DracoConfig(num_clients=n, lr=t.lr, local_batches=t.local_batches,
-                      batch_size=t.batch_size, lambda_grad=t.lambda_grad,
-                      lambda_tx=t.lambda_grad, unify_period=50, psi=psi,
+    cfg = DracoConfig(num_clients=n, lr=lr, local_batches=local_batches,
+                      batch_size=batch_size, lambda_grad=lambda_grad,
+                      lambda_tx=lambda_grad, unify_period=50, psi=psi,
                       topology=topology, max_delay_windows=4, channel=chan)
-    return cfg, train, test, params0, loss, acc, k3
+    return cfg, train, test, params0, workload, eval_fn, k3
 
 
 def seed_keys(key, seeds: int):
@@ -65,53 +99,72 @@ def _discard(state):
 
 
 def run(task_name="emnist", segments=8, seg_windows=100, seg_rounds=None,
-        seed=0, num_clients=None, out_dir="results", seeds=1):
+        seed=0, num_clients=None, out_dir="results", seeds=1,
+        optimizer="sgd"):
     """Compute-matched comparison: every method gets the same expected
-    number of local gradient computations per client per segment
-    (`steps_for_budget`). Each method's seed batch runs as a single
-    vmapped `simulate_sweep(...)` scan sampling accuracy in-jit; curves
-    are seed-means."""
-    cfg, train, test, params0, loss, acc, key = setup(task_name, seed, num_clients)
-    keys = seed_keys(key, seeds)
+    local compute per client per segment (`steps_for_budget`; for task-
+    registry workloads the budget is priced in FLOPs via
+    `task.grad_cost`). Each method's seed batch runs as a single
+    vmapped `simulate_sweep(...)` scan sampling the task metric in-jit;
+    curves are seed-means."""
+    from repro.tasks import is_task
 
-    # per-segment compute budget = DRACO's expected grads over one segment
-    budget = seg_windows * get_algorithm("draco").grads_per_step(cfg)
+    cfg, train, test, params0, workload, eval_fn, key = setup(
+        task_name, seed, num_clients, optimizer=optimizer)
+    keys = seed_keys(key, seeds)
+    task = workload if is_task(workload) else None
+    metric = task.metric_name if task is not None else "accuracy"
+
+    # per-segment compute budget = DRACO's expected compute over one
+    # segment (FLOP-priced through task.grad_cost for registry tasks)
+    cost = task.grad_cost if task is not None else 1.0
+    budget = seg_windows * get_algorithm("draco").grads_per_step(cfg) * cost
 
     # one shared context: graph, weight matrices and flat-plane layout
     # built once for all methods
-    ctx = make_context(cfg, loss, train, params0=params0)
+    ctx = make_context(cfg, workload, train, params0=params0)
     # every method starts from params0 replicated across clients (and
-    # push weights of 1), so the step-0 accuracy is one plain eval
-    acc0 = float(acc(params0, test[0], test[1]))
+    # push weights of 1), so the step-0 metric is one plain eval
+    m0 = float(eval_fn(params0, test[0], test[1]))
     curves = {}
     for name in ("draco",) + tuple(BASELINES):
         algo = get_algorithm(name)
         if name == "draco":
             per_seg = seg_windows
         else:
-            per_seg = seg_rounds or steps_for_budget(name, cfg, budget)
-        _, trace = simulate_sweep(algo, cfg, params0, loss, train,
+            per_seg = seg_rounds or steps_for_budget(name, cfg, budget,
+                                                     task=task)
+        _, trace = simulate_sweep(algo, cfg, params0, workload, train,
                                   num_steps=segments * per_seg, keys=keys,
-                                  eval_every=per_seg, eval_fn=acc,
+                                  eval_every=per_seg, eval_fn=eval_fn,
                                   eval_data=test, ctx=ctx, final_fn=_discard)
-        seed_mean = np.asarray(trace.metrics["accuracy"][0]).mean(axis=0)
-        curves[name] = [acc0] + [float(a) for a in seed_mean]
+        seed_mean = np.asarray(trace.metrics[metric][0]).mean(axis=0)
+        curves[name] = [m0] + [float(a) for a in seed_mean]
 
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"fig3_{task_name}.json")
     with open(path, "w") as f:
         json.dump({"task": task_name, "topology": cfg.topology,
-                   "curves": curves}, f, indent=1)
+                   "metric": metric, "curves": curves}, f, indent=1)
     print(f"# Fig3 ({task_name}, {cfg.topology} topology, {seeds} seed(s)) -> {path}")
-    print("method,final_acc,best_acc")
+    print(f"method,final_{metric},best_{metric}")
+    best = min if metric == "perplexity" else max
     for m, c in curves.items():
-        print(f"{m},{c[-1]:.4f},{max(c):.4f}")
+        print(f"{m},{c[-1]:.4f},{best(c):.4f}")
     return curves
 
 
 if __name__ == "__main__":
+    from repro.tasks import list_tasks
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--task", default="emnist", choices=list(TASKS))
+    ap.add_argument("--task", default="emnist",
+                    choices=list(TASKS) + list(list_tasks()),
+                    help="paper preset (emnist/poker) or task-registry "
+                         "workload (linear-softmax/mlp/small-cnn/tiny-lm)")
+    ap.add_argument("--optimizer", default="sgd",
+                    choices=("sgd", "momentum", "adamw"),
+                    help="local update rule (task-registry workloads only)")
     ap.add_argument("--segments", type=int, default=8)
     ap.add_argument("--clients", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -119,4 +172,4 @@ if __name__ == "__main__":
                     help="seed rows of the vmapped sweep (curves are means)")
     a = ap.parse_args()
     run(a.task, segments=a.segments, seed=a.seed, num_clients=a.clients,
-        seeds=a.seeds)
+        seeds=a.seeds, optimizer=a.optimizer)

@@ -45,9 +45,12 @@ def _total_accept(state):
 
 
 def _sweep_family(cfg, params0, loss, train, test, acc, key, keys, windows,
-                  segments, scenario, salts, kwargs_list, ctx):
+                  segments, scenario, salts, kwargs_list, ctx,
+                  metric="accuracy"):
     """One scenario family (shared generator, varying knobs) as one
-    sweep call over the stacked-schedule grid axis."""
+    sweep call over the stacked-schedule grid axis. `loss` is the
+    workload slot: a bare loss callable or a `repro.tasks.Task` (whose
+    metric name arrives via `metric`)."""
     scheds = [make_schedule(scenario, cfg, key=jax.random.fold_in(key, salt),
                             **kw) for salt, kw in zip(salts, kwargs_list)]
     seg_w = max(1, windows // segments)
@@ -55,15 +58,16 @@ def _sweep_family(cfg, params0, loss, train, test, acc, key, keys, windows,
         "draco", cfg, params0, loss, train, num_steps=segments * seg_w,
         keys=keys, eval_every=seg_w, eval_fn=acc, eval_data=test,
         schedules=scheds, ctx=ctx, final_fn=_total_accept)
+    best = min if metric == "perplexity" else max  # lower ppl is better
     rows = []
     for g in range(len(scheds)):
         accs = [float(a) for a in
-                np.asarray(trace.metrics["accuracy"][g]).mean(axis=0)]
+                np.asarray(trace.metrics[metric][g]).mean(axis=0)]
         cons = [float(c) for c in
                 np.asarray(trace.metrics["consensus"][g]).mean(axis=0)]
         rows.append({
             "final_acc": accs[-1],
-            "best_acc": max(accs),
+            "best_acc": best(accs),
             "final_consensus": cons[-1],
             "acc_curve": accs,
             "consensus_curve": cons,
@@ -74,23 +78,30 @@ def _sweep_family(cfg, params0, loss, train, test, acc, key, keys, windows,
 
 def run(task_name="emnist", windows=240, segments=6, seed=0, num_clients=None,
         churns=CHURNS, fracs=FRACS, sched_steps=32, out_dir="results",
-        bench_json="BENCH_scenarios.json", quick=False, seeds=1):
+        bench_json="BENCH_scenarios.json", quick=False, seeds=1,
+        optimizer="sgd"):
+    from repro.tasks import is_task
+
     if quick:
         windows, segments, num_clients = 60, 3, num_clients or 8
         churns, fracs, sched_steps = (0.0, 0.2), (0.0, 0.5), 12
     cfg, train, test, params0, loss, acc, key = setup(task_name, seed,
-                                                      num_clients)
+                                                      num_clients,
+                                                      optimizer=optimizer)
+    metric = loss.metric_name if is_task(loss) else "accuracy"
     ctx = make_context(cfg, loss, train, params0=params0)
     keys = seed_keys(key, seeds)
     churn_rows = _sweep_family(
         cfg, params0, loss, train, test, acc, key, keys, windows, segments,
         "markov-edge-flip", range(len(churns)),
-        [{"steps": sched_steps, "churn": float(c)} for c in churns], ctx)
+        [{"steps": sched_steps, "churn": float(c)} for c in churns], ctx,
+        metric=metric)
     strag_rows = _sweep_family(
         cfg, params0, loss, train, test, acc, key, keys, windows, segments,
         "straggler-profile", [100 + i for i in range(len(fracs))],
         [{"steps": sched_steps, "straggler_frac": float(f),
-          "slowdown": 10.0, "duty": 0.5} for f in fracs], ctx)
+          "slowdown": 10.0, "duty": 0.5} for f in fracs], ctx,
+        metric=metric)
     results = {
         "churn": {float(c): r for c, r in zip(churns, churn_rows)},
         "straggler": {float(f): r for f, r in zip(fracs, strag_rows)},
@@ -100,9 +111,9 @@ def run(task_name="emnist", windows=240, segments=6, seed=0, num_clients=None,
     path = os.path.join(out_dir, f"fig_dynamic_{task_name}.json")
     with open(path, "w") as f:
         json.dump({"task": task_name, "windows": windows,
-                   "results": results}, f, indent=1)
+                   "metric": metric, "results": results}, f, indent=1)
     print(f"# Fig-dynamic scenario sweeps ({task_name}) -> {path}")
-    print("sweep,knob,final_acc,best_acc,final_consensus,msgs")
+    print(f"sweep,knob,final_{metric},best_{metric},final_consensus,msgs")
     bench = {}
     for sweep, rows in results.items():
         for knob, r in rows.items():
@@ -120,7 +131,11 @@ def run(task_name="emnist", windows=240, segments=6, seed=0, num_clients=None,
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--task", default="emnist")
+    ap.add_argument("--task", default="emnist",
+                    help="paper preset (emnist/poker) or task-registry "
+                         "workload (linear-softmax/mlp/small-cnn/tiny-lm)")
+    ap.add_argument("--optimizer", default="sgd",
+                    choices=("sgd", "momentum", "adamw"))
     ap.add_argument("--windows", type=int, default=240)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--clients", type=int, default=None)
@@ -128,4 +143,4 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     a = ap.parse_args()
     run(a.task, windows=a.windows, seed=a.seed, num_clients=a.clients,
-        quick=a.quick, seeds=a.seeds)
+        quick=a.quick, seeds=a.seeds, optimizer=a.optimizer)

@@ -237,6 +237,48 @@ def bench_sweep(quick=False, json_path="BENCH_sweep.json"):
         print(f"# wrote {json_path}")
 
 
+def bench_tasks(quick=False, json_path="BENCH_tasks.json"):
+    """Task-layer: per-task DRACO step time at the paper scale (N=25)
+    through `simulate(task=...)` — the whole zoo (linear-softmax / mlp /
+    small-cnn / tiny-lm) plus one stateful-optimizer row (mlp + adamw:
+    the flat (N, 2*Dflat) optimizer plane riding the scan carry).
+    Writes BENCH_tasks.json (CI artifact) so per-workload step cost is
+    tracked across PRs like the gossip/scenario/sweep benches."""
+    import json as json_lib
+
+    from repro.api import simulate
+    from repro.core.protocol import DracoConfig
+    from repro.tasks import get_task, list_tasks
+
+    n = 8 if quick else 25
+    windows = 6 if quick else 12
+    iters = 2 if quick else 5
+    cfg = DracoConfig(num_clients=n, lr=0.05, local_batches=1, batch_size=16,
+                      lambda_grad=0.3, lambda_tx=0.3, unify_period=50,
+                      topology="cycle", max_delay_windows=4)
+    key = jax.random.PRNGKey(0)
+    rows = {}
+    variants = [(name, "sgd") for name in list_tasks()] + [("mlp", "adamw")]
+    for name, opt in variants:
+        task = get_task(name, optimizer=opt)
+
+        def one_run():
+            st, _ = simulate("draco", cfg, task=task, num_steps=windows,
+                             key=key)
+            return st.window_idx
+
+        us = time_fn(one_run, warmup=1, iters=iters) / windows
+        tag = f"task_{name}" + (f"_{opt}" if opt != "sgd" else "")
+        emit(f"{tag}_draco_window_N{n}", us,
+             f"grad_cost={task.grad_cost:.3g}MFLOP")
+        rows[f"{tag}_us_per_window"] = us
+    if json_path:
+        rows.update({"num_clients": n, "windows": windows})
+        with open(json_path, "w") as f:
+            json_lib.dump(rows, f, indent=1, sort_keys=True)
+        print(f"# wrote {json_path} ({len(rows)} entries)")
+
+
 def bench_fig3(quick=False):
     """Fig. 3 (both panels): DRACO vs baselines final accuracy."""
     from benchmarks.fig3_convergence import run
@@ -301,6 +343,7 @@ BENCHES = {
     "draco_window": bench_draco_window,
     "simulate_fused": bench_simulate_fused,
     "sweep": bench_sweep,
+    "tasks": bench_tasks,
     "fig3": bench_fig3,
     "fig4": bench_fig4,
     "fig_dynamic": bench_fig_dynamic,

@@ -9,11 +9,20 @@ One simulator for DRACO and every baseline:
                             eval_fn=acc, eval_data=test)
     print(trace.metrics["accuracy"])   # sampled in-jit, no host loop
 
+Workloads are first-class `repro.tasks.Task`s — model x local optimizer
+x federated dataset:
+
+    state, trace = simulate("draco", cfg, task="tiny-lm", num_steps=600,
+                            key=key, eval_every=100)
+    print(trace.metrics["perplexity"])
+
 Whole experiment grids (seeds x configs x scenarios) batch into one
 compiled call via `simulate_sweep` (see `repro.api.sweep`).
 
 New methods register with `@register_algorithm("name")` and implement
-`init/step/eval_params/grads_per_step` (see `repro.api.algorithm`).
+`init/step/eval_params/grads_per_step` (see `repro.api.algorithm`);
+new workloads register with `@register_task("name")` (see
+`repro.tasks`).
 """
 from repro.api.algorithm import (
     Algorithm,

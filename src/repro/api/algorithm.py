@@ -8,7 +8,8 @@ The shared `repro.api.simulate` driver runs any of them inside a single
 
     @register_algorithm("my-method")
     class MyMethod:
-        def init(self, key, cfg, params0): ...
+        def init(self, key, cfg, params0,
+                 task=None): ...                 # task: repro.tasks.Task
         def step(self, state, ctx): ...          # ctx: SimContext
         def eval_params(self, state): ...        # (N, ...) eval view
         def grads_per_step(self, cfg): ...       # expected local grads
@@ -27,18 +28,20 @@ from typing import Any, Dict, Protocol, Tuple, runtime_checkable
 class Algorithm(Protocol):
     """Structural interface every registered method implements.
 
-    `init(key, cfg, params0)` replicates a single-client pytree into the
-    method's state; `step(state, ctx)` advances one round/window using
-    only `state` and the immutable `SimContext`; `eval_params(state)`
-    returns the (N, ...) parameter view metrics should be computed on
-    (push-sum methods de-bias here); `grads_per_step(cfg)` is the
-    expected number of local-SGD invocations per client per step, used
-    by `steps_for_budget` for compute-matched comparisons.
+    `init(key, cfg, params0, task=None)` replicates a single-client
+    pytree into the method's state (`task`, a `repro.tasks.Task`, sizes
+    the flat local-optimizer plane); `step(state, ctx)` advances one
+    round/window using only `state` and the immutable `SimContext`;
+    `eval_params(state)` returns the (N, ...) parameter view metrics
+    should be computed on (push-sum methods de-bias here);
+    `grads_per_step(cfg)` is the expected number of local gradient
+    events per client per step, used by `steps_for_budget` for
+    compute-matched comparisons.
     """
 
     name: str
 
-    def init(self, key, cfg, params0) -> Any:
+    def init(self, key, cfg, params0, task=None) -> Any:
         ...
 
     def step(self, state, ctx) -> Any:

@@ -41,13 +41,13 @@ class Draco:
     # config fields the sweep engine may re-bind as traced scalars
     sweepable = ("lr", "lambda_grad", "lambda_tx", "psi")
 
-    def init(self, key, cfg, params0):
-        return protocol_lib.init_state(key, cfg, params0)
+    def init(self, key, cfg, params0, task=None):
+        return protocol_lib.init_state(key, cfg, params0, task=task)
 
     def step(self, state, ctx):
         v = _view(ctx, state.window_idx)
         return protocol_lib.draco_window(
-            state, ctx.cfg, v.q, v.adj, ctx.loss_fn, ctx.data,
+            state, ctx.cfg, v.q, v.adj, ctx.task, ctx.data,
             spec=ctx.flat_spec, positions=v.positions,
             compute_rate=v.compute_rate, tx_rate=v.tx_rate,
             overrides=ctx.overrides,
@@ -68,8 +68,8 @@ class _Baseline:
     # and Psi knobs are DRACO-specific
     sweepable = ("lr",)
 
-    def init(self, key, cfg, params0):
-        return baselines_lib.init_baseline_state(key, cfg, params0)
+    def init(self, key, cfg, params0, task=None):
+        return baselines_lib.init_baseline_state(key, cfg, params0, task=task)
 
     @staticmethod
     def _lr(ctx):
@@ -89,7 +89,7 @@ class SyncSymm(_Baseline):
     def step(self, state, ctx):
         v = _view(ctx, state.round_idx)
         return baselines_lib.sync_symm_round(
-            state, ctx.cfg, v.w_sym, v.adj, ctx.loss_fn, ctx.data,
+            state, ctx.cfg, v.w_sym, v.adj, ctx.task, ctx.data,
             positions=v.positions, compute_rate=v.compute_rate,
             lr=self._lr(ctx),
         )
@@ -102,7 +102,7 @@ class SyncPush(_Baseline):
     def step(self, state, ctx):
         v = _view(ctx, state.round_idx)
         state, _ = baselines_lib.sync_push_round(
-            state, ctx.cfg, v.adj, ctx.loss_fn, ctx.data,
+            state, ctx.cfg, v.adj, ctx.task, ctx.data,
             positions=v.positions, compute_rate=v.compute_rate,
             lr=self._lr(ctx),
         )
@@ -116,7 +116,7 @@ class AsyncSymm(_Baseline):
     def step(self, state, ctx):
         v = _view(ctx, state.round_idx)
         return baselines_lib.async_symm_round(
-            state, ctx.cfg, v.w_sym, v.adj, ctx.loss_fn, ctx.data,
+            state, ctx.cfg, v.w_sym, v.adj, ctx.task, ctx.data,
             p_active=P_ACTIVE, positions=v.positions,
             compute_rate=v.compute_rate, lr=self._lr(ctx),
         )
@@ -132,7 +132,7 @@ class AsyncPush(_Baseline):
     def step(self, state, ctx):
         v = _view(ctx, state.round_idx)
         state, _ = baselines_lib.async_push_round(
-            state, ctx.cfg, v.adj, ctx.loss_fn, ctx.data,
+            state, ctx.cfg, v.adj, ctx.task, ctx.data,
             p_active=P_ACTIVE, positions=v.positions,
             compute_rate=v.compute_rate, lr=self._lr(ctx),
         )

@@ -2,25 +2,32 @@
 
 Bundles everything a protocol step needs besides its own state — the
 gossip graph (boolean adjacency, row-stochastic Q, symmetric Metropolis
-weights), the loss, the federated data shards, the flat-plane layout
+weights), the *task* (model + loss + eval metric + local optimizer; see
+`repro.tasks`), the federated data shards, the flat-plane layout
 (`FlatSpec`: per-leaf shapes/offsets into the contiguous (N, Dflat)
-buffer, computed once per run), optional node positions, and an optional
-scenario `schedule` (`repro.scenarios.Schedule`: precomputed rings of
-time-varying `(q_t, adj_t, positions_t, compute_rate_t)`, indexed by
+buffer plus the (N, Dopt) optimizer plane, computed once per run),
+optional node positions, and an optional scenario `schedule`
+(`repro.scenarios.Schedule`: precomputed rings of time-varying
+`(q_t, adj_t, positions_t, compute_rate_t)`, indexed by
 ``step % period`` inside the jitted scan) — so graph/channel/schedule
 construction happens **once** per run instead of once per method (the
 legacy `run_baseline` rebuilt the graph inside every jit).
 
 `SimContext` is registered as a pytree: `(q, adj, w_sym, data,
 positions, schedule, overrides)` are traced children, while `(cfg,
-loss_fn, flat_spec)` ride as static aux data. Passing a context through
-`jax.jit` therefore recompiles only when the config, loss function,
-parameter layout or schedule *structure* changes, exactly like the
-legacy `static_argnames=("cfg", "loss_fn")` entry points.
+task, flat_spec)` ride as static aux data. Passing a context through
+`jax.jit` therefore recompiles only when the config, task, parameter
+layout or schedule *structure* changes, exactly like the legacy
+`static_argnames=("cfg", "loss_fn")` entry points.
+
+Legacy shim: the `task` slot accepts either a `repro.tasks.Task` or a
+bare ``loss(params, x, y)`` callable — pre-task call sites
+(`make_context(cfg, loss_fn, data)`) keep working bit-for-bit, and
+`ctx.loss_fn` always exposes the bare callable view.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Union
 
 import jax
 
@@ -33,21 +40,23 @@ from repro.core.topology import metropolis
 
 @jax.tree_util.register_pytree_node_class
 class SimContext:
-    """Immutable bundle of (cfg, loss_fn, q, adj, w_sym, data, positions,
+    """Immutable bundle of (cfg, task, q, adj, w_sym, data, positions,
     flat_spec, schedule, overrides).
 
-    `overrides` is a `repro.core.protocol.Overrides` of traced config
-    re-bindings (lr/lambda/psi), set per grid row by the sweep engine;
-    None (the default everywhere else) is the plain static-config path.
+    `task` is the workload: a `repro.tasks.Task` or — the legacy shim —
+    a bare loss callable (plain SGD). `overrides` is a
+    `repro.core.protocol.Overrides` of traced config re-bindings
+    (lr/lambda/psi), set per grid row by the sweep engine; None (the
+    default everywhere else) is the plain static-config path.
     """
 
-    __slots__ = ("cfg", "loss_fn", "q", "adj", "w_sym", "data", "positions",
+    __slots__ = ("cfg", "task", "q", "adj", "w_sym", "data", "positions",
                  "flat_spec", "schedule", "overrides")
 
-    def __init__(self, cfg, loss_fn, q, adj, w_sym, data, positions=None,
+    def __init__(self, cfg, task, q, adj, w_sym, data, positions=None,
                  flat_spec=None, schedule=None, overrides=None):
         object.__setattr__(self, "cfg", cfg)
-        object.__setattr__(self, "loss_fn", loss_fn)
+        object.__setattr__(self, "task", task)
         object.__setattr__(self, "q", q)
         object.__setattr__(self, "adj", adj)
         object.__setattr__(self, "w_sym", w_sym)
@@ -60,7 +69,15 @@ class SimContext:
     def __setattr__(self, name, value):
         raise AttributeError("SimContext is immutable")
 
+    @property
+    def loss_fn(self):
+        """The bare loss callable view of the task (legacy accessor)."""
+        t = self.task
+        return t.loss_fn if hasattr(t, "loss_fn") else t
+
     def replace(self, **kw) -> "SimContext":
+        if "loss_fn" in kw:  # legacy field name keeps working
+            kw["task"] = kw.pop("loss_fn")
         fields = {s: getattr(self, s) for s in self.__slots__}
         fields.update(kw)
         return SimContext(**fields)
@@ -68,14 +85,14 @@ class SimContext:
     def tree_flatten(self):
         children = (self.q, self.adj, self.w_sym, self.data, self.positions,
                     self.schedule, self.overrides)
-        aux = (self.cfg, self.loss_fn, self.flat_spec)
+        aux = (self.cfg, self.task, self.flat_spec)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        cfg, loss_fn, flat_spec = aux
+        cfg, task, flat_spec = aux
         q, adj, w_sym, data, positions, schedule, overrides = children
-        return cls(cfg, loss_fn, q, adj, w_sym, data, positions, flat_spec,
+        return cls(cfg, task, q, adj, w_sym, data, positions, flat_spec,
                    schedule, overrides)
 
     def __repr__(self):
@@ -83,25 +100,33 @@ class SimContext:
         sched = ""
         if self.schedule is not None:
             sched = f", schedule_period={self.schedule.period}"
+        t = self.task
+        tname = getattr(t, "name", None) or getattr(t, "__name__", t)
         return (f"SimContext(n={n}, topology={getattr(self.cfg, 'topology', '?')}, "
-                f"loss_fn={getattr(self.loss_fn, '__name__', self.loss_fn)!r}"
-                f"{sched})")
+                f"task={tname!r}{sched})")
 
 
-def make_context(cfg, loss_fn: Optional[Callable] = None, data: Any = None, *,
-                 params0: Any = None, graph_key=None, place_key=None,
-                 scenario=None, scenario_key=None,
-                 scenario_kwargs=None) -> SimContext:
+def make_context(cfg, loss_fn: Optional[Union[Callable, str, Any]] = None,
+                 data: Any = None, *, task=None, params0: Any = None,
+                 graph_key=None, place_key=None, scenario=None,
+                 scenario_key=None, scenario_kwargs=None) -> SimContext:
     """Build a `SimContext` from a `DracoConfig`-style config.
 
     Constructs the adjacency once and derives both weight matrices from
     it: row-stochastic Q (DRACO, push methods) and symmetric Metropolis
     weights (the *-symm baselines). `params0`, when given, fixes the
-    flat parameter plane layout (`FlatSpec` shapes/offsets) once per
-    run. `graph_key` seeds random topologies (e.g. "erdos");
+    flat parameter plane layout (`FlatSpec` shapes/offsets, plus the
+    optimizer-plane width `opt_dim` when the workload is a task) once
+    per run. `graph_key` seeds random topologies (e.g. "erdos");
     `place_key`, when given, additionally samples node positions for
     the wireless channel model (methods that carry positions in their
     own state may ignore it).
+
+    The workload slot: pass `task=` (a `repro.tasks.Task` or registry
+    name like ``"tiny-lm"``), or — the legacy shim — a bare loss
+    callable in the `loss_fn` position. The two spellings may not
+    disagree; a bare callable keeps the pre-task plain-SGD compiled
+    path bit-for-bit.
 
     `scenario` (a `repro.scenarios` generator name or a prebuilt
     `Schedule`) attaches time-varying rings: the context's `q`/`adj`/
@@ -112,6 +137,14 @@ def make_context(cfg, loss_fn: Optional[Callable] = None, data: Any = None, *,
     generator's knobs (churn rate, mobility speed, straggler fraction,
     ...).
     """
+    from repro.tasks import get_task, is_task, opt_width
+
+    if task is not None and loss_fn is not None and task is not loss_fn:
+        raise ValueError("pass the workload as either task= or the loss_fn "
+                         "position, not both")
+    task = task if task is not None else loss_fn
+    if isinstance(task, str):
+        task = get_task(task)
     schedule = None
     if scenario is None:
         if scenario_key is not None or scenario_kwargs:
@@ -140,5 +173,7 @@ def make_context(cfg, loss_fn: Optional[Callable] = None, data: Any = None, *,
     flat_spec = None
     if params0 is not None:
         flat_spec = flat_lib.spec_for(params0, cfg.num_clients)
-    return SimContext(cfg, loss_fn, q, adj, w_sym, data, positions, flat_spec,
+        if is_task(task):
+            flat_spec = flat_spec.with_opt(opt_width(task, params0))
+    return SimContext(cfg, task, q, adj, w_sym, data, positions, flat_spec,
                       schedule)

@@ -9,9 +9,17 @@ device, so there are no per-segment host round-trips, no re-dispatch,
 and no per-step trace memory — one compile per (algorithm, config,
 loss), then a single device call regardless of how often you sample.
 
-`steps_for_budget` converts a compute budget (expected local-SGD
-invocations per client) into a step count for any algorithm, expressing
-the paper's compute-matched comparisons in one place.
+`steps_for_budget` converts a compute budget (expected local gradient
+events per client, priced at `task.grad_cost` when a task is given)
+into a step count for any algorithm, expressing the paper's
+compute-matched comparisons in one place.
+
+Workloads are first-class: `simulate(algo, cfg, task="tiny-lm", ...)`
+pulls model/data/optimizer/metric from the `repro.tasks` registry —
+`params0` and `data` are built from the task when omitted, the local
+optimizer state rides the flat plane, and the trace metric is named by
+the task ("accuracy", "perplexity"). Bare `loss_fn=` callables remain
+the legacy plain-SGD spelling, bit-for-bit.
 
 Time-varying workloads ride the same scan: `simulate(...,
 scenario="random-waypoint")` attaches a `repro.scenarios.Schedule` to
@@ -60,17 +68,17 @@ def consensus_distance(params) -> jax.Array:
     return jnp.sqrt(((x - xbar) ** 2).sum() / x.shape[0])
 
 
-def _metrics(algo, state, eval_fn, eval_data):
+def _metrics(algo, state, eval_fn, eval_data, metric_name="accuracy"):
     p = algo.eval_params(state)
     out = {"consensus": consensus_distance(p)}
     if eval_fn is not None:
         ex, ey = eval_data
-        out["accuracy"] = jax.vmap(lambda pi: eval_fn(pi, ex, ey))(p).mean().astype(jnp.float32)
+        out[metric_name] = jax.vmap(lambda pi: eval_fn(pi, ex, ey))(p).mean().astype(jnp.float32)
     return out
 
 
 def _run_body(algo, ctx, state, eval_data, num_steps: int, eval_every: int,
-              eval_fn):
+              eval_fn, metric_name: str = "accuracy"):
     """One fused scan over `num_steps` protocol steps + in-jit eval.
 
     Nested scan: an outer scan over the `num_steps // eval_every` eval
@@ -99,14 +107,14 @@ def _run_body(algo, ctx, state, eval_data, num_steps: int, eval_every: int,
 
     def chunk_body(s, k):
         s, _ = jax.lax.scan(step_only, s, None, length=eval_every)
-        m = _metrics(algo, s, eval_fn, eval_data)
+        m = _metrics(algo, s, eval_fn, eval_data, metric_name)
         return s, dict(m, step=(k + 1) * eval_every)
 
     state, trace = jax.lax.scan(chunk_body, state,
                                 jnp.arange(chunks, dtype=jnp.int32))
     if rem:
         state, _ = jax.lax.scan(step_only, state, None, length=rem)
-        last = dict(_metrics(algo, state, eval_fn, eval_data),
+        last = dict(_metrics(algo, state, eval_fn, eval_data, metric_name),
                     step=jnp.asarray(num_steps, jnp.int32))
         trace = jax.tree_util.tree_map(
             lambda rows, row: jnp.concatenate(
@@ -115,17 +123,20 @@ def _run_body(algo, ctx, state, eval_data, num_steps: int, eval_every: int,
 
 
 _run = jax.jit(_run_body,
-               static_argnames=("algo", "num_steps", "eval_every", "eval_fn"))
+               static_argnames=("algo", "num_steps", "eval_every", "eval_fn",
+                                "metric_name"))
 
 
 def simulate(
     algo: Union[str, Algorithm],
     cfg,
-    params0,
+    params0=None,
     loss_fn: Optional[Callable] = None,
     data: Any = None,
     num_steps: int = 1,
     *,
+    task=None,
+    task_key=None,
     key=None,
     eval_every: int = 0,
     eval_fn: Optional[Callable] = None,
@@ -142,10 +153,23 @@ def simulate(
     Args:
       algo: registry name (e.g. "draco", "sync-push") or an `Algorithm`.
       cfg: `DracoConfig`-style frozen config (static: hashable).
-      params0: single-client param pytree (ignored when `state` given).
-      loss_fn: `loss(params_i, x, y)` used by local SGD (static).
-      data: federated train shards `(xs, ys)` with leading client axis.
+      params0: single-client param pytree (ignored when `state` given;
+        built by the task's model init when omitted and `task=` given).
+      loss_fn: `loss(params_i, x, y)` used by local SGD (static). The
+        legacy workload spelling — a `Task` supersedes it.
+      data: federated train shards `(xs, ys)` with leading client axis
+        (built by the task's dataset builder when omitted and `task=`
+        given).
       num_steps: protocol steps (DRACO windows / baseline rounds).
+      task: `repro.tasks.Task` or registry name ("linear-softmax",
+        "mlp", "small-cnn", "tiny-lm"): the (model x optimizer x
+        dataset) workload. Its local optimizer state rides the flat
+        plane on the algorithm state; its `eval_fn`/`metric_name` are
+        used when `eval_fn` is omitted. The default "linear-softmax" +
+        sgd(constant) task is bit-for-bit the bare-`loss_fn` path.
+      task_key: PRNGKey seeding the task's model/data builders when
+        params0/data are omitted (defaults to PRNGKey(0), so repeated
+        calls see the same workload).
       key: PRNGKey for state init (required unless `state` is given).
       eval_every: sample metrics every k steps, on device, via a nested
         scan that materializes one metrics row per sample (the trace is
@@ -174,10 +198,18 @@ def simulate(
       (final_state, SimTrace) — the trace holds exactly the sampled
       steps (sized on device; no host-side filtering).
     """
+    from repro.tasks import is_task
+
     if isinstance(algo, str):
         algo = get_algorithm(algo)
+    # params0 feeds state init and the ctx flat-spec (a warm restart with
+    # a prebuilt ctx needs neither); data feeds the ctx (a prebuilt ctx
+    # brings its own shards)
+    task, workload, params0, data, eval_data = resolve_workload(
+        cfg, task, task_key, loss_fn, params0, data, eval_data,
+        need_params=state is None or ctx is None, need_data=ctx is None)
     if ctx is None:
-        ctx = make_context(cfg, loss_fn, data, params0=params0,
+        ctx = make_context(cfg, workload, data, params0=params0,
                            graph_key=graph_key, scenario=scenario,
                            scenario_key=scenario_key,
                            scenario_kwargs=scenario_kwargs)
@@ -192,15 +224,26 @@ def simulate(
         raise ValueError(
             "ctx.cfg differs from cfg; pass ctx.replace(cfg=cfg) to reuse "
             "a context across config variants")
+    elif workload is not None and ctx.task != workload:
+        # equality, not identity: equal Task instances (e.g. two
+        # with_optimizer() copies) are the same static jit key
+        raise ValueError(
+            "ctx.task differs from the task/loss_fn argument; pass "
+            "ctx.replace(task=...) to rebind the workload")
+    metric_name = "accuracy"
+    if eval_fn is None and is_task(ctx.task) and eval_data is not None:
+        eval_fn = ctx.task.eval_fn
+    if is_task(ctx.task) and eval_fn is ctx.task.eval_fn:
+        metric_name = ctx.task.metric_name
     if state is None:
         if key is None:
             raise ValueError("key is required when no state is given")
-        state = algo.init(key, cfg, params0)
+        state = algo.init(key, cfg, params0, task=ctx.task)
     if eval_fn is not None and eval_data is None:
         raise ValueError("eval_fn requires eval_data=(ex, ey)")
 
     state, raw = _run(algo, ctx, state, eval_data, int(num_steps),
-                      int(eval_every), eval_fn)
+                      int(eval_every), eval_fn, metric_name)
 
     if raw is None:
         return state, SimTrace(np.zeros((0,), np.int32), {})
@@ -209,13 +252,77 @@ def simulate(
     return state, SimTrace(step, metrics)
 
 
-def steps_for_budget(algo: Union[str, Algorithm], cfg,
-                     budget_grads: float) -> int:
-    """Steps giving ~`budget_grads` expected local-SGD invocations per
-    client — the compute-matched budget of the paper's Fig. 3 (DRACO
-    fires 1-exp(-lambda*w) grads/client/window, sync baselines 1/round,
-    async baselines p_active/round)."""
+def resolve_workload(cfg, task, task_key, loss_fn, params0, data, eval_data,
+                     *, need_params: bool, need_data: bool):
+    """Shared task plumbing for `simulate` / `simulate_sweep`.
+
+    Resolves registry names, promotes a `Task` passed in the legacy
+    loss position, rejects conflicting spellings, and builds only the
+    *missing, actually-consumed* pieces from the task's builders
+    (`need_params` is False on a warm restart with a prebuilt ctx;
+    `need_data` is False whenever a prebuilt ctx supplies the shards —
+    regenerating a dataset that the scan never reads would also inject
+    an eval set drawn from different mixture anchors).
+
+    Returns ``(task, workload, params0, data, eval_data)`` where
+    `workload` is what the context carries (the task, or the bare loss
+    callable on the legacy path).
+    """
+    from repro.tasks import get_task, is_task
+
+    if isinstance(task, str):
+        task = get_task(task)
+    if task is None and is_task(loss_fn):
+        task = loss_fn  # Task passed in the legacy loss position
+    if task is not None:
+        if loss_fn is not None and loss_fn is not task:
+            raise ValueError("pass the workload as either task= or "
+                             "loss_fn=, not both")
+        need_params = need_params and params0 is None
+        need_data = need_data and data is None
+        if need_params or need_data:
+            tk = task_key if task_key is not None else jax.random.PRNGKey(0)
+            kp, kd = jax.random.split(tk)  # Task.setup's key derivation
+            if need_params:
+                params0 = task.init_params(kp)
+            if need_data:
+                data, ev = task.make_data(kd, cfg.num_clients)
+                if eval_data is None:
+                    eval_data = ev
+    elif task_key is not None:
+        raise ValueError("task_key given without task=")
+    workload = task if task is not None else loss_fn
+    return task, workload, params0, data, eval_data
+
+
+def steps_for_budget(algo: Union[str, Algorithm], cfg, budget_grads: float,
+                     task=None) -> int:
+    """Steps matching a per-client compute budget for any algorithm.
+
+    Without `task` (legacy), `budget_grads` counts expected local
+    gradient *events* per client and every event is priced uniformly —
+    the compute-matched budget of the paper's Fig. 3 (DRACO fires
+    1-exp(-lambda*w) grads/client/window, sync baselines 1/round, async
+    baselines p_active/round). That uniform pricing is only correct
+    when every method runs the same workload.
+
+    With `task` (a `repro.tasks.Task` or registry name), each event is
+    priced at `task.grad_cost` (relative FLOPs per local gradient
+    event), so `budget_grads` is a *FLOP* budget in the same units and
+    budget-matched runs equalize expected FLOPs — across algorithms
+    *and* across tasks of different model sizes:
+
+        steps = budget / (grads_per_step(cfg) * grad_cost)
+
+    tests/test_tasks.py pins the equalization.
+    """
     if isinstance(algo, str):
         algo = get_algorithm(algo)
-    rate = algo.grads_per_step(cfg)
+    cost = 1.0
+    if task is not None:
+        from repro.tasks import get_task
+
+        t = get_task(task) if isinstance(task, str) else task
+        cost = t.grad_cost
+    rate = algo.grads_per_step(cfg) * cost
     return max(1, int(round(budget_grads / max(rate, 1e-12))))

@@ -143,9 +143,11 @@ def shard_grid_inputs(states, data, num_clients: int, mesh):
 
 
 @partial(jax.jit, static_argnames=("algo", "num_steps", "eval_every",
-                                   "eval_fn", "grid", "final_fn"))
+                                   "eval_fn", "grid", "final_fn",
+                                   "metric_name"))
 def _run_sweep(algo, ctx, states, eval_data, num_steps: int, eval_every: int,
-               eval_fn, overrides, schedules, grid: int, final_fn):
+               eval_fn, overrides, schedules, grid: int, final_fn,
+               metric_name: str = "accuracy"):
     """scan(config/scenario grid) x vmap(seeds) x `_run_body` — one XLA
     program for the whole grid. `final_fn` slims each final state before
     it is stacked across the grid (a (G, K, D, N, Dflat) ring buffer
@@ -160,7 +162,7 @@ def _run_sweep(algo, ctx, states, eval_data, num_steps: int, eval_every: int,
             ctx_g = ctx_g.replace(schedule=sched)
         finals, trace = jax.vmap(
             lambda st: _run_body(algo, ctx_g, st, eval_data, num_steps,
-                                 eval_every, eval_fn))(states)
+                                 eval_every, eval_fn, metric_name))(states)
         if final_fn is not None:
             finals = final_fn(finals)
         return None, (finals, trace)
@@ -172,11 +174,13 @@ def _run_sweep(algo, ctx, states, eval_data, num_steps: int, eval_every: int,
 def simulate_sweep(
     algo: Union[str, Algorithm],
     cfg_grid,
-    params0,
+    params0=None,
     loss_fn: Optional[Callable] = None,
     data: Any = None,
     num_steps: int = 1,
     *,
+    task=None,
+    task_key=None,
     keys=None,
     key=None,
     num_seeds: int = 1,
@@ -197,6 +201,13 @@ def simulate_sweep(
       cfg_grid: one config, or a sequence differing only in `SWEEPABLE`
         fields the algorithm declares sweepable (`algo.sweepable`).
       params0 / loss_fn / data / num_steps: as in `simulate`.
+      task / task_key: the (model x optimizer x dataset) workload, as in
+        `simulate` — params0/data/eval default to the task's builders,
+        the local optimizer state rides the flat plane on every seed
+        row, and the trace metric takes the task's name ("perplexity"
+        for tiny-lm). Sweeping `lr` re-seeds the task's lr schedule per
+        grid row (the optimizer hyperparameter axis); the task must
+        declare it in `task.sweepable`.
       keys: (K, ...) stacked PRNGKeys, one per seed row; or pass `key` +
         `num_seeds` to split one. Row `k` is bit-identical to a solo
         `simulate(..., key=keys[k])` on one device.
@@ -220,10 +231,18 @@ def simulate_sweep(
       states) with leading (G, K) axes; the trace metrics are
       (G, K, num_evals).
     """
+    from repro.api.simulate import resolve_workload
+    from repro.tasks import is_task
+
     if isinstance(algo, str):
         algo = get_algorithm(algo)
     cfgs = cfg_grid if isinstance(cfg_grid, (list, tuple)) else [cfg_grid]
     base, overrides = stack_configs(cfgs)
+    # params0 always feeds the vmapped state init; data only feeds a
+    # freshly-built ctx (a prebuilt one brings its own shards)
+    task, workload, params0, data, eval_data = resolve_workload(
+        base, task, task_key, loss_fn, params0, data, eval_data,
+        need_params=True, need_data=ctx is None)
     swept = [f for f in SWEEPABLE if getattr(overrides, f) is not None]
     if len(cfgs) > 1 and not swept:
         raise ValueError(
@@ -257,21 +276,44 @@ def simulate_sweep(
     keys = jnp.asarray(keys)
 
     if ctx is None:
-        ctx = make_context(base, loss_fn, data, params0=params0,
+        ctx = make_context(base, workload, data, params0=params0,
                            graph_key=graph_key)
     elif ctx.cfg != base:
         raise ValueError(
             "ctx.cfg differs from the grid's base config; pass "
             "ctx.replace(cfg=cfg_grid[0]) to reuse a context")
+    elif workload is not None and ctx.task != workload:
+        # equality, not identity: equal Task instances (e.g. two
+        # with_optimizer() copies) are the same static jit key
+        raise ValueError(
+            "ctx.task differs from the task/loss_fn argument; pass "
+            "ctx.replace(task=...) to rebind the workload")
     if ctx.overrides is not None:
         raise ValueError("ctx already carries overrides; sweeps own them")
     if sched_stack is not None and ctx.schedule is not None:
         raise ValueError(
             "pass either schedules= or a ctx with a schedule, not both")
+    if (is_task(ctx.task) and "lr" in swept
+            and "lr" not in ctx.task.sweepable):
+        # the built-in optimizers all honor the traced lr (the schedule
+        # is re-seeded per grid row), but a custom task whose
+        # make_optimizer ignores its lr argument must say so — its grid
+        # rows would be silently identical
+        raise ValueError(
+            f"task {ctx.task.name!r} does not declare 'lr' sweepable "
+            f"(task.sweepable={ctx.task.sweepable}): its make_optimizer "
+            "does not consume the per-row lr override, so the grid rows "
+            "would be identical")
+    metric_name = "accuracy"
+    if eval_fn is None and is_task(ctx.task) and eval_data is not None:
+        eval_fn = ctx.task.eval_fn
+    if is_task(ctx.task) and eval_fn is ctx.task.eval_fn:
+        metric_name = ctx.task.metric_name
     if eval_fn is not None and eval_data is None:
         raise ValueError("eval_fn requires eval_data=(ex, ey)")
 
-    states = jax.vmap(lambda k: algo.init(k, base, params0))(keys)
+    states = jax.vmap(lambda k: algo.init(k, base, params0,
+                                          task=ctx.task))(keys)
     if mesh is not None:
         states, shard_data = shard_grid_inputs(states, ctx.data,
                                                base.num_clients, mesh)
@@ -279,7 +321,7 @@ def simulate_sweep(
 
     finals, raw = _run_sweep(algo, ctx, states, eval_data, int(num_steps),
                              int(eval_every), eval_fn, overrides, sched_stack,
-                             grid, final_fn)
+                             grid, final_fn, metric_name)
     if raw is None:
         return finals, SweepTrace(np.zeros((0,), np.int32), {})
     step = np.asarray(raw["step"][0, 0])

@@ -7,8 +7,12 @@
                 with symmetric mixing among surviving links
   - async-push: asynchronous push-sum gossip (Digest-style)
 
-All share DRACO's local-SGD machinery so comparisons isolate the
-*communication protocol*, not the optimizer.
+All share DRACO's local-update machinery (`protocol.local_step`) so
+comparisons isolate the *communication protocol*, not the optimizer:
+the workload slot of every round accepts a bare loss callable (legacy
+plain SGD, compiled graph unchanged) or a `repro.tasks.Task`, whose
+local optimizer state rides the flat `(N, Dopt)` plane on
+`BaselineState.opt_state` exactly as on `DracoState`.
 
 .. deprecated::
    The module-level entry points (`init_baseline_state` / `run_baseline`
@@ -29,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import channel as channel_lib
 from repro.core.channel import ChannelConfig
-from repro.core.protocol import DracoConfig, local_updates
+from repro.core.protocol import DracoConfig, _opt_plane, local_step
 from repro.core.topology import adjacency, metropolis, row_stochastic
 
 
@@ -39,9 +43,13 @@ class BaselineState(NamedTuple):
     key: jax.Array
     round_idx: jax.Array
     positions: jax.Array
+    opt_state: jax.Array = ()  # (N, Dopt) f32 — flat local optimizer plane
 
 
-def init_baseline_state(key, cfg: DracoConfig, params0) -> BaselineState:
+def init_baseline_state(key, cfg: DracoConfig, params0,
+                        task=None) -> BaselineState:
+    """`task` (a `repro.tasks.Task`) sizes the flat optimizer plane; None
+    or a bare loss callable keeps the plain-SGD (N, 0) layout."""
     n = cfg.num_clients
     kp, ks = jax.random.split(key)
     params = jax.tree_util.tree_map(
@@ -54,6 +62,7 @@ def init_baseline_state(key, cfg: DracoConfig, params0) -> BaselineState:
         key=ks,
         round_idx=jnp.zeros((), jnp.int32),
         positions=pos,
+        opt_state=_opt_plane(task, params0, n),
     )
 
 
@@ -91,13 +100,16 @@ def _sync_round_keys(state, n, compute_rate):
     return k_next, k_g, k_c, _participation(k_s, n, 1.0, compute_rate)
 
 
-def _advance(state, *, params, key, push_weight=None, positions=None):
+def _advance(state, *, params, key, push_weight=None, positions=None,
+             opt_state=None):
     """Shared end-of-round state update (positions track mobility)."""
     kw = dict(params=params, key=key, round_idx=state.round_idx + 1)
     if push_weight is not None:
         kw["push_weight"] = push_weight
     if positions is not None:
         kw["positions"] = positions
+    if opt_state is not None:
+        kw["opt_state"] = opt_state
     return state._replace(**kw)
 
 
@@ -108,18 +120,20 @@ def _mix_rows(w, params):
     )
 
 
-def sync_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data, *,
+def sync_symm_round(state: BaselineState, cfg, w_sym, adj, task, data, *,
                     positions=None, compute_rate=None, lr=None):
     """D-SGD with Metropolis weights; dropped links' mass folds into self.
 
-    A scenario compute-rate ring turns into a per-round completion
+    `task`: a `repro.tasks.Task` or a bare loss callable (legacy plain
+    SGD). A scenario compute-rate ring turns into a per-round completion
     probability: stragglers skip their local update (their stale params
     still mix) — sync methods *wait* for nobody here, matching DRACO's
     compute/comms decoupling rather than stalling the round."""
     n = cfg.num_clients
     all_on = jnp.ones((n,), bool)
     k_next, k_g, k_c, on = _sync_round_keys(state, n, compute_rate)
-    delta = local_updates(k_g, state.params, on, cfg, loss_fn, data, lr=lr)
+    delta, opt_state = local_step(k_g, state.params, on, cfg, task, data,
+                                  state.opt_state, state.round_idx, lr=lr)
     params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
     succ = _link_success(k_c, state, cfg, adj, all_on, positions=positions)
     succ = succ & succ.T  # symmetric methods need bidirectional links
@@ -127,16 +141,18 @@ def sync_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data, *,
     # dropped links' weight folds back into the self-loop (keeps w row-stoch.)
     w = jnp.where(jnp.eye(n, dtype=bool), 1.0 - w.sum(axis=1, keepdims=True), w)
     params = _mix_rows(w, params)
-    return _advance(state, params=params, key=k_next, positions=positions)
+    return _advance(state, params=params, key=k_next, positions=positions,
+                    opt_state=opt_state)
 
 
-def sync_push_round(state: BaselineState, cfg, adj, loss_fn, data, *,
+def sync_push_round(state: BaselineState, cfg, adj, task, data, *,
                     positions=None, compute_rate=None, lr=None):
     """Synchronous push-sum (stochastic gradient push, Assran et al.)."""
     n = cfg.num_clients
     all_on = jnp.ones((n,), bool)
     k_next, k_g, k_c, on = _sync_round_keys(state, n, compute_rate)
-    delta = local_updates(k_g, state.params, on, cfg, loss_fn, data, lr=lr)
+    delta, opt_state = local_step(k_g, state.params, on, cfg, task, data,
+                                  state.opt_state, state.round_idx, lr=lr)
     params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
     succ = _link_success(k_c, state, cfg, adj, all_on, positions=positions)
     # column-stochastic P: sender splits mass over (self + successful out-links)
@@ -151,10 +167,10 @@ def sync_push_round(state: BaselineState, cfg, adj, loss_fn, data, *,
         params,
     )
     return _advance(state, params=params, key=k_next, push_weight=w,
-                    positions=positions), de_biased
+                    positions=positions, opt_state=opt_state), de_biased
 
 
-def async_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data,
+def async_symm_round(state: BaselineState, cfg, w_sym, adj, task, data,
                      p_active: float = 0.5, *, positions=None,
                      compute_rate=None, lr=None):
     """Async decentralized SGD w/ delay deadline [15]: only a random subset
@@ -164,17 +180,19 @@ def async_symm_round(state: BaselineState, cfg, w_sym, adj, loss_fn, data,
     n = cfg.num_clients
     k_next, k_a, k_g, k_c = jax.random.split(state.key, 4)
     active = _participation(k_a, n, p_active, compute_rate)
-    delta = local_updates(k_g, state.params, active, cfg, loss_fn, data, lr=lr)
+    delta, opt_state = local_step(k_g, state.params, active, cfg, task, data,
+                                  state.opt_state, state.round_idx, lr=lr)
     params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
     succ = _link_success(k_c, state, cfg, adj, active, positions=positions)
     succ = succ & succ.T & active[:, None] & active[None, :]
     w = jnp.where(succ, w_sym, 0.0)
     w = jnp.where(jnp.eye(n, dtype=bool), 1.0 - w.sum(axis=1), w)
     params = _mix_rows(w, params)
-    return _advance(state, params=params, key=k_next, positions=positions)
+    return _advance(state, params=params, key=k_next, positions=positions,
+                    opt_state=opt_state)
 
 
-def async_push_round(state: BaselineState, cfg, adj, loss_fn, data,
+def async_push_round(state: BaselineState, cfg, adj, task, data,
                      p_active: float = 0.5, *, positions=None,
                      compute_rate=None, lr=None):
     """Asynchronous push-sum gossip (Digest-style [50]): active clients
@@ -182,7 +200,8 @@ def async_push_round(state: BaselineState, cfg, adj, loss_fn, data,
     n = cfg.num_clients
     k_next, k_a, k_g, k_c = jax.random.split(state.key, 4)
     active = _participation(k_a, n, p_active, compute_rate)
-    delta = local_updates(k_g, state.params, active, cfg, loss_fn, data, lr=lr)
+    delta, opt_state = local_step(k_g, state.params, active, cfg, task, data,
+                                  state.opt_state, state.round_idx, lr=lr)
     params = jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), state.params, delta)
     succ = _link_success(k_c, state, cfg, adj, active, positions=positions)
     out = succ.astype(jnp.float32)
@@ -197,7 +216,7 @@ def async_push_round(state: BaselineState, cfg, adj, loss_fn, data,
         params,
     )
     return _advance(state, params=params, key=k_next, push_weight=w,
-                    positions=positions), de_biased
+                    positions=positions, opt_state=opt_state), de_biased
 
 
 BASELINES = ("sync-symm", "sync-push", "async-symm", "async-push")
@@ -206,6 +225,8 @@ BASELINES = ("sync-symm", "sync-push", "async-symm", "async-push")
 @partial(jax.jit, static_argnames=("method", "cfg", "loss_fn", "num_rounds"))
 def run_baseline(method: str, state, cfg: DracoConfig, loss_fn, data,
                  num_rounds: int, graph_key=None):
+    """`loss_fn` may be a bare loss callable or a `repro.tasks.Task`
+    (both are hashable static jit keys)."""
     adj = adjacency(cfg.topology, cfg.num_clients, key=graph_key)
     w_sym = metropolis(adj)
 

@@ -31,6 +31,15 @@ class FlatSpec(NamedTuple):
     Hashable (tuples + treedef only), so it can ride through ``jax.jit``
     as auxiliary data.  ``offsets[i]:offsets[i]+sizes[i]`` is leaf ``i``'s
     column range in the flat ``(N, dim)`` buffer.
+
+    ``opt_dim`` is the per-client flat width of the task's local
+    optimizer state, laid out as its own ``(N, opt_dim)`` plane next to
+    the ``(N, dim)`` parameter plane (momentum -> ``dim``, adamw ->
+    ``2 * dim + 1`` incl. its per-client step counter, plain SGD -> 0;
+    see ``repro.tasks.opt_width``).  The
+    optimizer plane is never gossiped — it stays client-local — but it
+    rides the same contiguous layout so sweeps/sharding treat it
+    uniformly.
     """
 
     treedef: Any
@@ -39,10 +48,17 @@ class FlatSpec(NamedTuple):
     offsets: Tuple[int, ...]
     sizes: Tuple[int, ...]  # per-client flat width of each leaf
     dim: int  # Dflat = sum(sizes)
+    opt_dim: int = 0  # Dopt = flat width of the local optimizer state
 
     @property
     def num_clients(self) -> int:
         return self.shapes[0][0] if self.shapes else 0
+
+    def with_opt(self, opt_dim: int) -> "FlatSpec":
+        """The same parameter layout with an optimizer plane of width
+        ``opt_dim`` alongside (``repro.api.make_context`` sets this from
+        the task's optimizer)."""
+        return self._replace(opt_dim=int(opt_dim))
 
 
 def spec_of(tree) -> FlatSpec:

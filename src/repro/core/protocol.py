@@ -39,6 +39,19 @@ The accumulation order (oldest broadcast first) matches the seed ring
 buffer exactly, so the fused engine is bit-for-bit equal to the legacy
 path at f32 — enforced by tests/test_protocol_parity.py against the
 `*_legacy` reference implementations kept at the bottom of this module.
+
+Task layer (PR 5)
+-----------------
+The workload slot of every step function accepts either a bare
+``loss(params, x, y)`` callable — the legacy plain-SGD path, compiled
+graph unchanged — or a `repro.tasks.Task` bundling model init/apply, a
+federated dataset, an eval metric, and a **local optimizer** from
+`repro.optim` whose per-client state rides a flat ``(N, Dopt)`` plane
+(`DracoState.opt_state`) next to the ``(N, Dflat)`` payloads. The
+optimizer plane is client-local: it is never gossiped, and hub
+unification overwrites params only. Dispatch lives in `local_step`;
+the default ``linear-softmax`` + ``sgd(constant)`` task is bit-for-bit
+the bare-loss path (tests/test_tasks.py).
 """
 from __future__ import annotations
 
@@ -51,12 +64,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import jax.flatten_util
+
 from repro.core import channel as channel_lib
 from repro.core import flat as flat_lib
 from repro.core.channel import ChannelConfig
 from repro.core.events import sample_event_masks
 from repro.core.topology import adjacency, row_stochastic
 from repro.kernels.gossip import ops as gossip_ops
+from repro.optim.optimizers import apply_updates
 
 
 @dataclass(frozen=True)
@@ -127,10 +143,25 @@ class DracoState(NamedTuple):
     window_idx: jax.Array  # scalar int32
     key: jax.Array
     positions: jax.Array  # (N, 2) node coordinates (channel model)
+    opt_state: jax.Array = ()  # (N, Dopt) f32 — flat local optimizer plane
 
 
-def init_state(key, cfg: DracoConfig, params0) -> DracoState:
-    """params0: single-client param pytree -> replicated across N clients."""
+def _opt_plane(task, params0, n) -> jax.Array:
+    """Zero-initialized (N, Dopt) optimizer plane for `task` (Dopt=0 for
+    bare-loss/plain-SGD workloads — an empty column block)."""
+    from repro.tasks.base import opt_width
+
+    return jnp.zeros((n, opt_width(task, params0)), jnp.float32)
+
+
+def init_state(key, cfg: DracoConfig, params0, task=None) -> DracoState:
+    """params0: single-client param pytree -> replicated across N clients.
+
+    `task` (a `repro.tasks.Task`), when given, sizes the flat local
+    optimizer plane `opt_state` from its update rule (momentum -> Dflat,
+    adamw -> 2*Dflat + a per-client step counter); None or a bare loss
+    callable means plain SGD and
+    an empty (N, 0) plane — the pre-task layout, bit-for-bit."""
     n, d = cfg.num_clients, cfg.max_delay_windows
     kp, ks = jax.random.split(key)
     params = jax.tree_util.tree_map(
@@ -149,6 +180,7 @@ def init_state(key, cfg: DracoConfig, params0) -> DracoState:
         window_idx=jnp.zeros((), jnp.int32),
         key=ks,
         positions=pos,
+        opt_state=_opt_plane(task, params0, n),
     )
 
 
@@ -177,6 +209,78 @@ def local_updates(key, params, grad_mask, cfg, loss_fn, data, *, lr=None):
     return jax.tree_util.tree_map(
         lambda dl: dl * gm.reshape((n,) + (1,) * (dl.ndim - 1)), delta
     )
+
+
+def task_local_updates(key, params, grad_mask, cfg, task, data, opt_state,
+                       step, *, lr=None):
+    """Per-client B-batch local updates through the task's optimizer.
+
+    The task-layer generalization of `local_updates`: each local batch
+    computes a gradient and feeds it to the task's `repro.optim` update
+    rule instead of the hard-coded ``p - lr*g``. The per-client optimizer
+    state lives on the flat plane — `opt_state` is the ``(N, Dopt)`` f32
+    matrix; inside the per-client body it is unraveled into the
+    optimizer's pytree (exact reshape/concat round-trip) and raveled
+    back out. Clients whose `grad_mask` is off fired no gradient event:
+    their delta is zeroed (as before) **and** their optimizer state is
+    left untouched.
+
+    With the default plain SGD + constant schedule this is bit-for-bit
+    `local_updates` (``p + g*(-lr)`` and ``p - lr*g`` are the same f32
+    values; tests/test_tasks.py pins the equality through full runs).
+
+    `step` (traced int32) feeds the lr schedule and AdamW bias
+    correction — the protocol's window/round counter, shared by the B
+    in-window batches. `lr`, when given, is a traced override re-seeding
+    the schedule (config sweeps); None keeps the static `cfg.lr`.
+    Returns ``(delta pytree (N, ...), new opt_state (N, Dopt))``.
+    """
+    xs, ys = data
+    n = cfg.num_clients
+    lr = cfg.lr if lr is None else lr
+    opt = task.make_optimizer(lr)
+    loss_fn = task.loss_fn
+
+    def one_client(p_i, key_i, x_i, y_i, o_i):
+        _, unravel = jax.flatten_util.ravel_pytree(opt.init(p_i))
+        o0 = unravel(o_i)
+
+        def body(carry, k):
+            p, o = carry
+            idx = jax.random.randint(k, (cfg.batch_size,), 0, x_i.shape[0])
+            g = jax.grad(loss_fn)(p, x_i[idx], y_i[idx])
+            upd, o = opt.update(g, o, p, step)
+            return (apply_updates(p, upd), o), None
+
+        keys = jax.random.split(key_i, cfg.local_batches)
+        (p_b, o), _ = jax.lax.scan(body, (p_i, o0), keys)
+        delta = jax.tree_util.tree_map(lambda pb, p: pb - p, p_b, p_i)
+        return delta, jax.flatten_util.ravel_pytree(o)[0]
+
+    keys = jax.random.split(key, n)
+    delta, opt_new = jax.vmap(one_client)(params, keys, xs, ys, opt_state)
+    gm = grad_mask.astype(jnp.float32)
+    delta = jax.tree_util.tree_map(
+        lambda dl: dl * gm.reshape((n,) + (1,) * (dl.ndim - 1)), delta
+    )
+    opt_new = jnp.where(grad_mask[:, None], opt_new, opt_state)
+    return delta, opt_new
+
+
+def local_step(key, params, grad_mask, cfg, task, data, opt_state, step, *,
+               lr=None):
+    """Dispatch local updates by workload representation.
+
+    A bare loss callable (or None task) runs the seed `local_updates`
+    graph unchanged — the exact pre-task compiled path, optimizer plane
+    threaded through untouched. A `repro.tasks.Task` routes through
+    `task_local_updates` (pluggable optimizer, state on the flat plane).
+    """
+    if task is None or not hasattr(task, "loss_fn"):
+        return (local_updates(key, params, grad_mask, cfg, task, data, lr=lr),
+                opt_state)
+    return task_local_updates(key, params, grad_mask, cfg, task, data,
+                              opt_state, step, lr=lr)
 
 
 def _psi_accept(key, success, accept_count, psi):
@@ -274,16 +378,19 @@ def _unify(params, accept_count, widx, cfg, n):
     return jax.lax.cond(do_unify, unify, lambda a: a, (params, accept_count))
 
 
-def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data,
+def draco_window(state: DracoState, cfg: DracoConfig, q, adj, task, data,
                  spec=None, *, positions=None, compute_rate=None,
                  tx_rate=None, overrides=None):
     """One superposition window on the fused gossip engine.
 
     Bit-for-bit equal to `draco_window_legacy` at f32 (the parity suite
     enforces it); see the module docstring for the enqueue/drain design.
-    `spec` is the flat-plane layout (`FlatSpec`); pass the one stored on
-    `SimContext` to share it across steps, or omit it to derive it from
-    `state.params` at trace time.
+    `task` is the workload: a `repro.tasks.Task` (model + data + local
+    optimizer, state on the flat plane) or — the legacy shim — a bare
+    ``loss(params, x, y)`` callable, which runs the seed plain-SGD graph
+    unchanged. `spec` is the flat-plane layout (`FlatSpec`); pass the
+    one stored on `SimContext` to share it across steps, or omit it to
+    derive it from `state.params` at trace time.
 
     The keyword-only trio carries a scenario schedule's step-t snapshot
     (`repro.scenarios`): `positions` (N, 2) overrides the state-carried
@@ -326,8 +433,8 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data,
     if compute_rate is not None:
         lam_g = lam_g * compute_rate
     grad_mask = sample_event_masks(k_grad, lam_g, cfg.window, n)
-    delta = local_updates(k_gsel, params, grad_mask, cfg, loss_fn, data,
-                          lr=ov.lr)
+    delta, opt_state = local_step(k_gsel, params, grad_mask, cfg, task, data,
+                                  state.opt_state, widx, lr=ov.lr)
     pending = state.pending + flat_lib.ravel_clients(delta)
     if cfg.apply_self_update:
         params = jax.tree_util.tree_map(
@@ -367,13 +474,15 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, loss_fn, data,
         window_idx=widx + 1,
         key=k_next,
         positions=state.positions if positions is None else positions,
+        opt_state=opt_state,
     )
 
 
-@partial(jax.jit, static_argnames=("cfg", "loss_fn", "num_windows"))
-def run_windows(state, cfg: DracoConfig, q, adj, loss_fn, data, num_windows: int):
+@partial(jax.jit, static_argnames=("cfg", "task", "num_windows"))
+def run_windows(state, cfg: DracoConfig, q, adj, task, data, num_windows: int):
+    """`task`: a `repro.tasks.Task` or a bare loss callable (legacy)."""
     def step(s, _):
-        return draco_window(s, cfg, q, adj, loss_fn, data), None
+        return draco_window(s, cfg, q, adj, task, data), None
 
     state, _ = jax.lax.scan(step, state, None, length=num_windows)
     return state
@@ -406,10 +515,13 @@ class DracoStateLegacy(NamedTuple):
     window_idx: jax.Array  # scalar int32
     key: jax.Array
     positions: jax.Array  # (N, 2) node coordinates (channel model)
+    opt_state: jax.Array = ()  # (N, Dopt) f32 — flat local optimizer plane
 
 
-def init_state_legacy(key, cfg: DracoConfig, params0) -> DracoStateLegacy:
-    """Seed layout: per-leaf pytree buffers of already-mixed deltas."""
+def init_state_legacy(key, cfg: DracoConfig, params0,
+                      task=None) -> DracoStateLegacy:
+    """Seed layout: per-leaf pytree buffers of already-mixed deltas.
+    `task` sizes the flat optimizer plane exactly as in `init_state`."""
     n, d = cfg.num_clients, cfg.max_delay_windows
     kp, ks = jax.random.split(key)
     params = jax.tree_util.tree_map(
@@ -429,6 +541,7 @@ def init_state_legacy(key, cfg: DracoConfig, params0) -> DracoStateLegacy:
         window_idx=jnp.zeros((), jnp.int32),
         key=ks,
         positions=pos,
+        opt_state=_opt_plane(task, params0, n),
     )
 
 
@@ -437,9 +550,11 @@ def draco_window_legacy(state: DracoStateLegacy, cfg: DracoConfig, q, adj,
     """Seed window: D-1 per-bucket full-pytree einsums at enqueue time.
 
     Deliberately self-contained (no code shared with `draco_window`
-    beyond `local_updates`/`_psi_accept`, which predate the fusion), so
-    the parity suite compares two independent implementations rather
-    than one refactor of the other."""
+    beyond the local-update machinery (`local_step`) and `_psi_accept`,
+    which predate the fusion), so the parity suite compares two
+    independent *gossip engines* rather than one refactor of the other.
+    `loss_fn` may be a `repro.tasks.Task` — the oracle for task-layer
+    parity runs (the dispatcher keeps the bare-callable graph verbatim)."""
     n, D = cfg.num_clients, cfg.max_delay_windows
     keys = jax.random.split(state.key, 8)
     k_next, k_grad, k_gsel, k_tx, k_chan, k_psi, k_hub, _ = keys
@@ -457,7 +572,8 @@ def draco_window_legacy(state: DracoStateLegacy, cfg: DracoConfig, q, adj,
 
     # --- 2. gradient events ------------------------------------------------
     grad_mask = sample_event_masks(k_grad, cfg.lambda_grad, cfg.window, n)
-    delta = local_updates(k_gsel, params, grad_mask, cfg, loss_fn, data)
+    delta, opt_state = local_step(k_gsel, params, grad_mask, cfg, loss_fn,
+                                  data, state.opt_state, widx)
     pending = jax.tree_util.tree_map(lambda a, b: a + b, state.pending, delta)
     if cfg.apply_self_update:
         params = jax.tree_util.tree_map(
@@ -525,6 +641,7 @@ def draco_window_legacy(state: DracoStateLegacy, cfg: DracoConfig, q, adj,
         window_idx=widx + 1,
         key=k_next,
         positions=state.positions,
+        opt_state=opt_state,
     )
 
 

@@ -80,6 +80,17 @@ def momentum(schedule, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
 
 def adamw(schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
           weight_decay: float = 0.0) -> Optimizer:
+    """AdamW whose bias-correction counter lives in its *own state*
+    (`"t"`), not the caller's `step` argument.
+
+    `step` feeds only the lr schedule — it is "protocol time" (the
+    DRACO window / round index, shared by all clients), whereas bias
+    correction must track how many updates *this* state has actually
+    absorbed. A duty-cycled straggler whose first gradient event lands
+    at window 100 still gets the full first-step correction
+    (mhat = m/(1-b1) = g), instead of a ~(1-b1)-damped one keyed to a
+    clock it never ticked.
+    """
     schedule = schedule if callable(schedule) else constant_schedule(schedule)
 
     def init(params):
@@ -87,11 +98,12 @@ def adamw(schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
         return {
             "m": jax.tree_util.tree_map(z, params),
             "v": jax.tree_util.tree_map(z, params),
+            "t": jnp.zeros((), jnp.float32),
         }
 
     def update(grads, state, params, step):
         lr = schedule(step)
-        t = step + 1
+        t = state["t"] + 1
         m = jax.tree_util.tree_map(
             lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32), state["m"], grads
         )
@@ -99,8 +111,8 @@ def adamw(schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
             lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
             state["v"], grads,
         )
-        bc1 = 1 - b1 ** t.astype(jnp.float32) if hasattr(t, "astype") else 1 - b1 ** t
-        bc2 = 1 - b2 ** t.astype(jnp.float32) if hasattr(t, "astype") else 1 - b2 ** t
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
 
         def upd(mm, vv, p):
             mhat = mm / bc1
@@ -109,7 +121,7 @@ def adamw(schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
             return u
 
         updates = jax.tree_util.tree_map(upd, m, v, params)
-        return updates, {"m": m, "v": v}
+        return updates, {"m": m, "v": v, "t": t}
 
     return Optimizer(init, update)
 

@@ -1,0 +1,37 @@
+"""`repro.tasks` — first-class (model x optimizer x dataset) workloads.
+
+    from repro.tasks import get_task, list_tasks
+
+    task = get_task("mlp", optimizer="adamw")
+    state, trace = simulate("draco", cfg, task=task, num_steps=600,
+                            key=key, eval_every=100)
+
+See `repro.tasks.base` for the `Task` contract and
+`repro.tasks.zoo` for the built-in workloads
+(linear-softmax / mlp / small-cnn / tiny-lm).
+"""
+from repro.tasks.base import (
+    Task,
+    as_task,
+    get_task,
+    is_task,
+    list_tasks,
+    loss_of,
+    opt_width,
+    register_task,
+)
+
+# importing the module registers the built-in tasks
+from repro.tasks import zoo  # noqa: F401
+
+__all__ = [
+    "Task",
+    "as_task",
+    "get_task",
+    "is_task",
+    "list_tasks",
+    "loss_of",
+    "opt_width",
+    "register_task",
+    "zoo",
+]

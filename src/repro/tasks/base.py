@@ -1,0 +1,262 @@
+"""The `Task` abstraction: pluggable (model x optimizer x dataset) workloads.
+
+DRACO is a statement about training *neural networks* over asynchronous
+row-stochastic networks, but a protocol step only ever touches the
+workload through four narrow interfaces: a loss to differentiate, a
+federated dataset to draw batches from, an update rule to apply per
+local batch, and an eval metric. A `Task` bundles exactly those —
+
+  - **model**: `init_params(key)` -> single-client param pytree, plus a
+    `loss_fn(params, x, y)` closed over the architecture (static, so it
+    is a stable jit key — tasks are cached singletons);
+  - **data**: `make_data(key, num_clients)` -> `((xs, ys), (ex, ey))`
+    federated train shards with a leading client axis + held-out eval;
+  - **local optimizer**: `make_optimizer(lr)` -> a `repro.optim`
+    `Optimizer` whose per-client state rides the flat parameter plane
+    (`(N, Dopt)` next to the `(N, Dflat)` payloads — see
+    `repro.core.protocol.task_local_updates`);
+  - **metric**: `eval_fn(params, ex, ey)` -> scalar, named by
+    `metric_name` ("accuracy", "perplexity") in the `SimTrace`;
+  - **cost**: `grad_cost`, the relative FLOP price of one local
+    gradient event, consumed by `repro.api.steps_for_budget` so
+    compute-matched comparisons equalize FLOPs, not event counts.
+
+Tasks register with `@register_task("name")` — the same string-keyed
+idiom as the algorithm and scenario registries — and are built via
+`get_task(name, **knobs)`. Builds are cached on `(name, knobs)`:
+`get_task` returns the *same* `Task` object for the same arguments, so
+using a task as a static jit key never recompiles across calls.
+
+Legacy shim: everything downstream also accepts a bare loss callable
+where a `Task` is expected — dispatch is duck-typed on `loss_fn`
+(`repro.core.protocol.local_step`, `SimContext.loss_fn`), so the
+pre-task `simulate(..., loss_fn=...)` call sites keep working
+bit-for-bit through the exact seed compiled graph. `as_task` /
+`loss_of` are convenience converters for external code that wants one
+uniform representation; the hot path never wraps.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro import optim
+
+
+@dataclass(frozen=True)
+class Task:
+    """Immutable (model x optimizer x dataset) bundle; a static jit key.
+
+    Frozen + field-identity equality: two `get_task` calls with the same
+    arguments return the same cached instance, so jit caches keyed on
+    the task are stable.
+    """
+
+    name: str
+    init_params: Callable  # key -> single-client param pytree
+    loss_fn: Callable  # (params, x, y) -> scalar (differentiated per batch)
+    eval_fn: Callable  # (params, ex, ey) -> scalar metric
+    make_data: Callable  # (key, num_clients) -> ((xs, ys), (ex, ey))
+    metric_name: str = "accuracy"
+    opt_name: str = "sgd"  # repro.optim factory name
+    schedule: str = "constant"  # lr schedule family
+    opt_kwargs: Tuple[Tuple[str, Any], ...] = ()  # (beta, b1, ...) frozen
+    schedule_kwargs: Tuple[Tuple[str, Any], ...] = ()
+    grad_cost: float = 1.0  # relative FLOPs of one local gradient event
+    # optimizer hyperparameters the sweep engine may re-bind as traced
+    # scalars (threaded into make_optimizer); today that is the lr that
+    # seeds the schedule
+    sweepable: Tuple[str, ...] = ("lr",)
+
+    def make_optimizer(self, lr) -> optim.Optimizer:
+        """Build the local update rule with `lr` seeding the schedule.
+
+        `lr` may be a python float (the static-config path) or a traced
+        f32 scalar (the sweep engine's lr axis) — every schedule closes
+        over it without shape commitments.
+        """
+        sched_fn = _SCHEDULES[self.schedule](lr, **dict(self.schedule_kwargs))
+        return _OPTIMIZERS[self.opt_name](sched_fn, **dict(self.opt_kwargs))
+
+    def setup(self, key, num_clients: int):
+        """Convenience builder: `(params0, train, eval_data)` from one key."""
+        kp, kd = jax.random.split(key)
+        train, eval_data = self.make_data(kd, num_clients)
+        return self.init_params(kp), train, eval_data
+
+    def with_optimizer(self, opt_name: str, schedule: str = None,
+                       schedule_kwargs: dict = None,
+                       **opt_kwargs) -> "Task":
+        """The same workload under a different local update rule.
+
+        `schedule_kwargs` carries the schedule family's knobs (e.g.
+        ``schedule="cosine", schedule_kwargs={"total_steps": 600}``).
+        Kwargs follow their family: changing the optimizer/schedule
+        family without passing new kwargs clears the old family's
+        kwargs (they would not typecheck); keeping the family keeps
+        them.
+        """
+        if opt_name not in _OPTIMIZERS:
+            raise KeyError(
+                f"unknown optimizer {opt_name!r}; known: {sorted(_OPTIMIZERS)}")
+        if schedule is not None and schedule not in _SCHEDULES:
+            raise KeyError(
+                f"unknown schedule {schedule!r}; known: {sorted(_SCHEDULES)}")
+        if opt_kwargs:
+            opt_kw = tuple(sorted(opt_kwargs.items()))
+        else:
+            opt_kw = self.opt_kwargs if opt_name == self.opt_name else ()
+        if schedule_kwargs is not None:
+            sched_kw = tuple(sorted(schedule_kwargs.items()))
+        elif schedule is None or schedule == self.schedule:
+            sched_kw = self.schedule_kwargs  # family kept -> kwargs kept
+        else:
+            sched_kw = ()
+        return replace(
+            self, opt_name=opt_name,
+            schedule=self.schedule if schedule is None else schedule,
+            opt_kwargs=opt_kw,
+            schedule_kwargs=sched_kw)
+
+    def __repr__(self):
+        return (f"Task({self.name!r}, opt={self.opt_name}/{self.schedule}, "
+                f"metric={self.metric_name}, grad_cost={self.grad_cost:.3g})")
+
+
+_OPTIMIZERS = {
+    "sgd": lambda sched: optim.sgd(sched),
+    "momentum": optim.momentum,
+    "adamw": optim.adamw,
+}
+
+_SCHEDULES = {
+    "constant": lambda lr: optim.constant_schedule(lr),
+    "cosine": optim.cosine_schedule,
+    "warmup-cosine": optim.warmup_cosine,
+}
+
+
+def is_task(obj) -> bool:
+    """Duck-typed check used by the protocol layer (no import cycle)."""
+    return isinstance(obj, Task)
+
+
+def as_task(loss_or_task, name: str = "<legacy-loss>") -> Optional[Task]:
+    """Legacy shim: wrap a bare loss callable into a plain-SGD task.
+
+    Cached on the callable, so the wrapper — and therefore every jit
+    key derived from it — is stable across calls. `Task`s and `None`
+    pass through unchanged.
+    """
+    if loss_or_task is None or is_task(loss_or_task):
+        return loss_or_task
+    if not callable(loss_or_task):
+        raise TypeError(
+            f"expected a Task, a loss callable or None; got {loss_or_task!r}")
+    try:
+        return _WRAPPED[loss_or_task]
+    except KeyError:
+        pass
+
+    def _no_data(key, num_clients):
+        raise NotImplementedError(
+            "a legacy bare-loss task has no dataset builder; pass data= "
+            "explicitly or use a registered task")
+
+    t = Task(name=name, init_params=_no_init, loss_fn=loss_or_task,
+             eval_fn=_no_eval, make_data=_no_data)
+    _WRAPPED[loss_or_task] = t
+    return t
+
+
+def _no_init(key):
+    raise NotImplementedError(
+        "a legacy bare-loss task has no model builder; pass params0=")
+
+
+def _no_eval(params, ex, ey):
+    raise NotImplementedError(
+        "a legacy bare-loss task has no eval metric; pass eval_fn=")
+
+
+_WRAPPED: Dict[Callable, Task] = {}
+
+
+def loss_of(task_or_loss):
+    """The bare loss callable of either representation (legacy accessor)."""
+    if is_task(task_or_loss):
+        return task_or_loss.loss_fn
+    return task_or_loss
+
+
+def opt_width(task, params0) -> int:
+    """Per-client flat width Dopt of the task's optimizer state.
+
+    Probed with `jax.eval_shape` on the single-client pytree — no real
+    compute, exact for any optimizer whose state is a pytree of arrays
+    (sgd -> 0, momentum -> Dflat, adamw -> 2*Dflat + 1: m, v and its
+    per-client bias-correction counter).
+    """
+    if task is None or not is_task(task):
+        return 0
+    opt = task.make_optimizer(0.0)
+    shapes = jax.eval_shape(opt.init, params0)
+    return int(sum(np.prod(l.shape, dtype=np.int64)
+                   for l in jax.tree_util.tree_leaves(shapes)))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_BUILDERS: Dict[str, Callable[..., Task]] = {}
+_CACHE: Dict[Tuple, Task] = {}
+
+
+def register_task(name: str):
+    """Decorator: register a task *builder* under `name`.
+
+    The builder is called lazily by `get_task(name, **knobs)` and its
+    result cached per knob set, so tasks are singletons.
+    """
+
+    def deco(fn):
+        _BUILDERS[name] = fn
+        return fn
+
+    return deco
+
+
+def _freeze(v):
+    """Hashable canonical form of a builder kwarg (dicts/lists allowed:
+    ``get_task("mlp", hidden=[64, 64], opt_kwargs={"beta": 0.95})``)."""
+    if isinstance(v, dict):
+        return ("<dict>",) + tuple(sorted((k, _freeze(x))
+                                          for k, x in v.items()))
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    return v
+
+
+def get_task(name: str, **kwargs) -> Task:
+    """Resolve (and memoize) a registered task; `Task`s pass through."""
+    if is_task(name):
+        return name
+    try:
+        builder = _BUILDERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown task {name!r}; registered: {sorted(_BUILDERS)}"
+        ) from None
+    cache_key = (name, tuple(sorted((k, _freeze(v))
+                                    for k, v in kwargs.items())))
+    if cache_key not in _CACHE:
+        _CACHE[cache_key] = builder(**kwargs)
+    return _CACHE[cache_key]
+
+
+def list_tasks() -> Tuple[str, ...]:
+    return tuple(sorted(_BUILDERS))

@@ -69,6 +69,7 @@ def test_registry_resolves_every_method():
         get_algorithm("no-such-method")
 
 
+@pytest.mark.slow
 def test_draco_parity_bitwise(task):
     """simulate("draco", ...) == run_windows bit-for-bit, incl. wireless
     channel + Psi cap + unification, with in-jit eval enabled."""
@@ -95,6 +96,7 @@ def test_draco_parity_bitwise(task):
     assert (trace.metrics["consensus"] >= 0).all()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("method", BASELINES)
 def test_baseline_parity_bitwise(method, task):
     """simulate(method, ...) == run_baseline bit-for-bit for every
@@ -126,6 +128,7 @@ def test_simulate_compiles_once_per_algo_cfg(task):
     assert _run._cache_size() == n0 + 1
 
 
+@pytest.mark.slow
 def test_shared_context_reused_across_methods(task):
     """One SimContext drives every method (graph built once)."""
     train, _, params0, loss, _ = task
@@ -173,6 +176,7 @@ def test_eval_every_zero_skips_trace(task):
     assert int(st.window_idx) == 4
 
 
+@pytest.mark.slow
 def test_final_partial_chunk_eval_row(task):
     """`num_steps % eval_every` trailing steps end with a metrics row at
     step `num_steps`, so the trace reflects the end-of-run model (the
@@ -195,6 +199,7 @@ def test_final_partial_chunk_eval_row(task):
     assert list(trace2.step) == [3]
 
 
+@pytest.mark.slow
 def test_trace_step_dtype_unified(task):
     """SimTrace.step is int32 for empty, scanned, and appended rows."""
     train, test, params0, loss, acc = task

@@ -50,7 +50,7 @@ def test_push_sum_mass_conservation(task):
     total0 = [np.asarray(l.sum(0)) for l in jax.tree_util.tree_leaves(st.params)]
     st2, _ = sync_push_round(st, cfg,
                              adj=jnp.asarray(~np.eye(N, dtype=bool)),
-                             loss_fn=loss, data=train)
+                             task=loss, data=train)
     np.testing.assert_allclose(float(st2.push_weight.sum()), N, rtol=1e-5)
     total1 = [np.asarray(l.sum(0)) for l in jax.tree_util.tree_leaves(st2.params)]
     for a, b in zip(total0, total1):

@@ -67,3 +67,94 @@ def test_mlp_learns_centralized():
         params = step(params, jax.random.fold_in(key, s))
     tx, ty = test
     assert float(acc(params, tx, ty)) > 0.7
+
+
+# ---------------------------------------------------------------------------
+# dirichlet_partition contracts (PR 5): index bounds + alpha extremes
+# ---------------------------------------------------------------------------
+
+
+def test_dirichlet_partition_index_bounds():
+    """Every sampled index addresses the pool: 0 <= idx < n_samples, for
+    several client counts and alphas (with-replacement categorical draws
+    must never escape the dataset)."""
+    key = jax.random.PRNGKey(10)
+    n_samples = 777  # deliberately not a round number
+    _, y, _ = classification_task(key, n_samples, 4, 6)
+    for alpha in (0.05, 100.0):
+        for num_clients in (1, 16):
+            idx = dirichlet_partition(jax.random.fold_in(key, hash((alpha, num_clients)) % 2**31),
+                                      y, num_clients=num_clients,
+                                      num_classes=6, alpha=alpha,
+                                      per_client=200)
+            arr = np.asarray(idx)
+            assert arr.shape == (num_clients, 200)
+            assert arr.min() >= 0 and arr.max() < n_samples
+            assert np.issubdtype(arr.dtype, np.integer)
+
+
+def _client_class_hists(y, idx, num_classes):
+    return np.stack([
+        np.bincount(np.asarray(y[c]), minlength=num_classes) / c.shape[0]
+        for c in np.asarray(idx)
+    ])
+
+
+def test_dirichlet_alpha_to_zero_collapses_to_single_class():
+    """alpha -> 0: each client's Dirichlet draw concentrates on one
+    class, so its shard is (near-)pure — max class share -> 1."""
+    key = jax.random.PRNGKey(11)
+    _, y, _ = classification_task(key, 8000, 4, 8)
+    idx = dirichlet_partition(jax.random.fold_in(key, 1), y, num_clients=12,
+                              num_classes=8, alpha=1e-3, per_client=400)
+    hists = _client_class_hists(y, idx, 8)
+    # most clients are pure; the occasional draw splits across two
+    # classes (still a valid Dirichlet sample), so pin mean + floor
+    assert hists.max(axis=1).mean() > 0.9
+    assert hists.max(axis=1).min() > 0.5
+    # monotone in alpha: far more concentrated than the alpha=0.5 regime
+    idx_mild = dirichlet_partition(jax.random.fold_in(key, 3), y,
+                                   num_clients=12, num_classes=8,
+                                   alpha=0.5, per_client=400)
+    assert (hists.max(axis=1).mean()
+            > _client_class_hists(y, idx_mild, 8).max(axis=1).mean())
+
+
+def test_dirichlet_alpha_to_inf_approaches_uniform():
+    """alpha -> inf: draws concentrate on the uniform simplex center, so
+    shards approach the pool's class distribution (IID split)."""
+    key = jax.random.PRNGKey(12)
+    _, y, _ = classification_task(key, 5000, 4, 8)
+    idx = dirichlet_partition(jax.random.fold_in(key, 2), y, num_clients=8,
+                              num_classes=8, alpha=1e4, per_client=1000)
+    hists = _client_class_hists(y, idx, 8)
+    # every class present on every client, shares near 1/8
+    assert hists.min() > 0.0
+    np.testing.assert_allclose(hists, 1.0 / 8, atol=0.05)
+    # and far less concentrated than a skewed split
+    assert hists.max(axis=1).mean() < 0.2
+
+
+def test_classification_task_anchor_reuse_determinism():
+    """Passing anchors= back in (a) skips the anchor draw deterministically
+    — same key, same anchors -> bitwise-identical samples — and (b)
+    generates from the *given* mixture: the paper's train/test split
+    draws both sets from one anchor family."""
+    key = jax.random.PRNGKey(13)
+    x1, y1, anchors = classification_task(key, 500, 8, 5)
+    # reuse: identical draw when anchors are supplied explicitly
+    x2, y2, anchors2 = classification_task(key, 500, 8, 5, anchors=anchors)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    np.testing.assert_array_equal(np.asarray(anchors), np.asarray(anchors2))
+    # foreign anchors change the samples but not the label stream
+    other = jnp.asarray(np.asarray(anchors)[::-1].copy())
+    x3, y3, _ = classification_task(key, 500, 8, 5, anchors=other)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y3))
+    assert not np.array_equal(np.asarray(x1), np.asarray(x3))
+    # low noise: samples cluster on their class anchor
+    x4, y4, _ = classification_task(jax.random.fold_in(key, 1), 500, 8, 5,
+                                    noise=1e-3, anchors=anchors)
+    d = np.linalg.norm(np.asarray(x4) - np.asarray(anchors)[np.asarray(y4)],
+                       axis=1)
+    assert d.max() < 0.1

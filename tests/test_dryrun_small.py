@@ -9,6 +9,10 @@ import textwrap
 
 import pytest
 
+# tier-2: mesh dry-run subprocess battery (ROADMAP tier-1 runs
+# -m "not slow")
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

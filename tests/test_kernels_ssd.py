@@ -9,6 +9,9 @@ from repro.kernels.ssd.ref import ssd_chunk_ref
 from repro.kernels.ssd.ssd import ssd_chunk_pallas
 from repro.models.ssm import ssd_chunked, ssd_reference
 
+# tier-2: SSD kernel battery (~30s) (ROADMAP tier-1 runs -m "not slow")
+pytestmark = pytest.mark.slow
+
 CASES = [
     # (B, T, H, P, G, N, chunk)
     (2, 64, 4, 8, 2, 16, 16),

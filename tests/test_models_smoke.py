@@ -7,6 +7,9 @@ import pytest
 from repro.configs.base import ARCH_IDS, SHAPES, get_config, get_reduced
 from repro.models.registry import build_model
 
+# tier-2: heavy reduced-arch smoke battery (~95s) (ROADMAP tier-1 runs -m "not slow")
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, key, B=2, S=32):
     batch = {}

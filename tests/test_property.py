@@ -28,6 +28,9 @@ from repro.core.topology import (
 )
 from repro.scenarios import check_snapshot, list_scenarios, make_schedule
 
+# tier-2: hypothesis fuzz + invariant battery (ROADMAP tier-1 runs -m "not slow")
+pytestmark = pytest.mark.slow
+
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True

@@ -80,6 +80,7 @@ def test_no_tx_no_param_change(task):
     assert pend > 0
 
 
+@pytest.mark.slow  # ~37s: the single heaviest protocol battery
 def test_psi_cap_respected(task):
     train, _, params0, loss, _ = task
     psi = 2

@@ -27,6 +27,9 @@ from repro.core.protocol import (
 )
 from repro.data.synthetic import federated_classification, make_mlp
 
+# tier-2: fused-vs-seed engine parity battery (ROADMAP tier-1 runs -m "not slow")
+pytestmark = pytest.mark.slow
+
 N = 5
 CHANNEL = ChannelConfig(message_bytes=51_640, gamma_max=10.0)
 

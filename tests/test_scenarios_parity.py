@@ -26,6 +26,9 @@ from repro.core.protocol import DracoConfig
 from repro.core.topology import is_row_stochastic
 from repro.data.synthetic import federated_classification, make_mlp
 
+# tier-2: scenario parity battery (ROADMAP tier-1 runs -m "not slow")
+pytestmark = pytest.mark.slow
+
 N = 5
 DYNAMIC = ("markov-edge-flip", "random-waypoint", "straggler-profile")
 CHANNEL = ChannelConfig(message_bytes=51_640, gamma_max=10.0)

@@ -17,6 +17,9 @@ from repro.core.channel import ChannelConfig
 from repro.core.protocol import DracoConfig
 from repro.data.synthetic import federated_classification, make_mlp
 
+# tier-2: sweep-engine bitwise parity battery (ROADMAP tier-1 runs -m "not slow")
+pytestmark = pytest.mark.slow
+
 N = 5
 
 

@@ -15,6 +15,12 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+# tier-2: 8-device CPU mesh subprocess battery (ROADMAP tier-1 runs
+# -m "not slow")
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

@@ -12,6 +12,9 @@ from repro.core.channel import ChannelConfig
 from repro.core.protocol import DracoConfig, build_graph, init_state, run_windows
 from repro.data.synthetic import federated_classification, make_mlp
 
+# tier-2: end-to-end system runs (ROADMAP tier-1 runs -m "not slow")
+pytestmark = pytest.mark.slow
+
 N = 8
 
 

@@ -18,6 +18,10 @@ import pytest
 from repro.core.protocol import DracoConfig, build_graph, init_state, run_windows
 from repro.core.topology import adjacency
 
+# tier-2: multi-hundred-window convergence-theory runs (ROADMAP tier-1
+# runs -m "not slow")
+pytestmark = pytest.mark.slow
+
 N = 6
 DIM = 10
 
