@@ -320,6 +320,66 @@ def bench_fig_dynamic(quick=False):
          f"worstfrac={worst_strag:.3f}")
 
 
+def bench_events(quick=False, json_path="BENCH_events.json"):
+    """Event engine: per-event dispatch cost vs the windowed engine's
+    per-window cost at the paper scale (N=25), plus the staleness-damped
+    variant. One tape row does strictly less work than one window (one
+    client acts, not a Poisson thinning of all N), but there are ~N x
+    (lambda_grad + lambda_tx) x window more rows per simulated second —
+    BENCH_events.json records both unit costs and the resulting
+    us-per-simulated-second ratio so the speed/fidelity trade is tracked
+    across PRs like the other BENCH_* artifacts."""
+    import json as json_lib
+
+    from repro.api import simulate
+    from repro.events import EventConfig, events_context, simulate_events
+    from repro.tasks import get_task
+
+    n = 8 if quick else 25
+    horizon = 4.0 if quick else 10.0
+    iters = 2 if quick else 5
+    cfg = EventConfig(num_clients=n, lr=0.05, local_batches=1, batch_size=16,
+                      lambda_grad=0.3, lambda_tx=0.3, unify_period=50,
+                      topology="cycle", max_delay_windows=4,
+                      staleness="poly")
+    task = get_task("linear-softmax")
+    key = jax.random.PRNGKey(0)
+    data, _ = task.make_data(jax.random.PRNGKey(1), n)
+    ctx = events_context(cfg, task=task, data=data, horizon=horizon,
+                         params0=task.init_params(key))
+    n_events = max(ctx.tape.num_valid, 1)
+    rows = {}
+
+    def windowed():
+        st, _ = simulate("draco", cfg, task=task, data=data,
+                         num_steps=int(horizon / cfg.window), key=key)
+        return st.window_idx
+
+    us_w = time_fn(windowed, warmup=1, iters=iters) / (horizon / cfg.window)
+    emit(f"draco_window_N{n}", us_w, "us_per_window")
+    rows["draco_us_per_window"] = us_w
+
+    for algo in ("draco-event", "fedasync-gossip"):
+
+        def run(algo=algo):
+            st, _ = simulate_events(algo, cfg, ctx=ctx, key=key)
+            return st.event_idx
+
+        us_e = time_fn(run, warmup=1, iters=iters) / n_events
+        emit(f"{algo}_N{n}", us_e, "us_per_event")
+        rows[f"{algo.replace('-', '_')}_us_per_event"] = us_e
+        rows[f"{algo.replace('-', '_')}_us_per_sim_s"] = (
+            us_e * n_events / horizon)
+    rows["draco_us_per_sim_s"] = us_w / cfg.window
+    rows.update({"num_clients": n, "horizon_s": horizon,
+                 "tape_events": n_events,
+                 "tape_capacity": ctx.tape.capacity})
+    if json_path:
+        with open(json_path, "w") as f:
+            json_lib.dump(rows, f, indent=1, sort_keys=True)
+        print(f"# wrote {json_path} ({len(rows)} entries)")
+
+
 def bench_decode(quick=False):
     """Serving-layer: single-token decode latency, reduced dense arch."""
     from repro.configs.base import get_reduced
@@ -344,6 +404,7 @@ BENCHES = {
     "simulate_fused": bench_simulate_fused,
     "sweep": bench_sweep,
     "tasks": bench_tasks,
+    "events": bench_events,
     "fig3": bench_fig3,
     "fig4": bench_fig4,
     "fig_dynamic": bench_fig_dynamic,

@@ -42,18 +42,26 @@ from repro.api.sweep import SweepTrace, simulate_sweep
 # importing the module registers the built-in algorithms
 from repro.api import algorithms  # noqa: F401
 
+# the continuous-time event engine: registers draco-event /
+# fedasync-gossip / event-triggered / fedasync-window and re-exports the
+# timeline driver (repro.events defers its api imports, so this is
+# cycle-free)
+from repro.events import events_context, simulate_events  # noqa: E402
+
 __all__ = [
     "Algorithm",
     "SimContext",
     "SimTrace",
     "algorithms",
     "consensus_distance",
+    "events_context",
     "get_algorithm",
     "list_algorithms",
     "make_context",
     "register_algorithm",
     "simulate",
     "simulate_sweep",
+    "simulate_events",
     "SweepTrace",
     "steps_for_budget",
 ]

@@ -14,8 +14,11 @@ construction happens **once** per run instead of once per method (the
 legacy `run_baseline` rebuilt the graph inside every jit).
 
 `SimContext` is registered as a pytree: `(q, adj, w_sym, data,
-positions, schedule, overrides)` are traced children, while `(cfg,
-task, flat_spec)` ride as static aux data. Passing a context through
+positions, schedule, overrides, tape)` are traced children, while
+`(cfg, task, flat_spec)` ride as static aux data. The `tape` slot
+carries a `repro.events.EventTape` for the continuous-time event
+engine (None everywhere else); like the schedule, it is device data —
+equal-capacity tapes share one compiled scan. Passing a context through
 `jax.jit` therefore recompiles only when the config, task, parameter
 layout or schedule *structure* changes, exactly like the legacy
 `static_argnames=("cfg", "loss_fn")` entry points.
@@ -41,7 +44,7 @@ from repro.core.topology import metropolis
 @jax.tree_util.register_pytree_node_class
 class SimContext:
     """Immutable bundle of (cfg, task, q, adj, w_sym, data, positions,
-    flat_spec, schedule, overrides).
+    flat_spec, schedule, overrides, tape).
 
     `task` is the workload: a `repro.tasks.Task` or — the legacy shim —
     a bare loss callable (plain SGD). `overrides` is a
@@ -51,10 +54,10 @@ class SimContext:
     """
 
     __slots__ = ("cfg", "task", "q", "adj", "w_sym", "data", "positions",
-                 "flat_spec", "schedule", "overrides")
+                 "flat_spec", "schedule", "overrides", "tape")
 
     def __init__(self, cfg, task, q, adj, w_sym, data, positions=None,
-                 flat_spec=None, schedule=None, overrides=None):
+                 flat_spec=None, schedule=None, overrides=None, tape=None):
         object.__setattr__(self, "cfg", cfg)
         object.__setattr__(self, "task", task)
         object.__setattr__(self, "q", q)
@@ -65,6 +68,7 @@ class SimContext:
         object.__setattr__(self, "flat_spec", flat_spec)
         object.__setattr__(self, "schedule", schedule)
         object.__setattr__(self, "overrides", overrides)
+        object.__setattr__(self, "tape", tape)
 
     def __setattr__(self, name, value):
         raise AttributeError("SimContext is immutable")
@@ -84,16 +88,16 @@ class SimContext:
 
     def tree_flatten(self):
         children = (self.q, self.adj, self.w_sym, self.data, self.positions,
-                    self.schedule, self.overrides)
+                    self.schedule, self.overrides, self.tape)
         aux = (self.cfg, self.task, self.flat_spec)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         cfg, task, flat_spec = aux
-        q, adj, w_sym, data, positions, schedule, overrides = children
+        q, adj, w_sym, data, positions, schedule, overrides, tape = children
         return cls(cfg, task, q, adj, w_sym, data, positions, flat_spec,
-                   schedule, overrides)
+                   schedule, overrides, tape)
 
     def __repr__(self):
         n = self.q.shape[0] if self.q is not None else "?"

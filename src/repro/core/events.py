@@ -31,9 +31,30 @@ def sample_event_masks(key, lam, window: float, n: int):
     return jax.random.uniform(key, (n,)) < p
 
 
-def sample_event_counts(key, lam, window: float, n: int, max_count: int = 8):
-    """(n,) int — number of events in the window (truncated Poisson)."""
+def poisson_truncation_bound(lamw_max: float, sigmas: float = 6.0) -> int:
+    """Truncation cap for a Poisson(lam*w) count: mean + `sigmas` std
+    deviations (Poisson variance == mean), floored at a small constant so
+    near-zero rates still admit the occasional event. At 6 sigma the
+    clipped tail mass is negligible (< ~1e-9) at any rate."""
+    hi = max(float(lamw_max), 0.0)
+    return int(np.ceil(hi + sigmas * np.sqrt(max(hi, 1.0)))) + 1
+
+
+def sample_event_counts(key, lam, window: float, n: int, max_count=None):
+    """(n,) int — number of events in the window (truncated Poisson).
+
+    ``max_count=None`` (the default) sizes the truncation from the rate
+    itself via `poisson_truncation_bound` (mean + 6 sigma), so high-rate
+    clients keep their tail mass. The old fixed ``max_count=8`` silently
+    clipped any client with ``lam*w`` above ~4 — reachable with Pareto
+    straggler profiles — biasing its event count low. Passing an explicit
+    ``max_count`` keeps the truncated behavior (and is required when
+    `lam` is a traced value, since the default needs a concrete rate).
+    """
     lamw = jnp.broadcast_to(jnp.asarray(lam) * window, (n,))
+    if max_count is None:
+        max_count = poisson_truncation_bound(
+            float(np.max(np.asarray(lam))) * window)
     return jnp.clip(jax.random.poisson(key, lamw), 0, max_count)
 
 

@@ -380,7 +380,7 @@ def _unify(params, accept_count, widx, cfg, n):
 
 def draco_window(state: DracoState, cfg: DracoConfig, q, adj, task, data,
                  spec=None, *, positions=None, compute_rate=None,
-                 tx_rate=None, overrides=None):
+                 tx_rate=None, overrides=None, damping=None):
     """One superposition window on the fused gossip engine.
 
     Bit-for-bit equal to `draco_window_legacy` at f32 (the parity suite
@@ -404,6 +404,13 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, task, data,
     `overrides` (an `Overrides`) re-binds lr/lambda/psi with *traced*
     scalars — the sweep engine's config axis; None fields keep the
     static config values bit-for-bit.
+
+    `damping` is an optional age-indexed ``(D,)`` f32 vector scaling the
+    drain's per-bucket weights: the bucket whose messages are ``j``
+    windows old is multiplied by ``damping[j]`` before the fused drain —
+    the staleness-adaptive mixing hook (`repro.events.staleness`
+    builds the FedAsync constant/hinge/poly vectors). None keeps the
+    undamped drain bit-for-bit.
     """
     n, D = cfg.num_clients, cfg.max_delay_windows
     ov = overrides or Overrides()
@@ -422,6 +429,8 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, task, data,
     w_stack = state.w_ring[slots] * (
         state.delay_ring[slots] == ages[:, None, None]
     ).astype(state.w_ring.dtype)
+    if damping is not None:
+        w_stack = w_stack * damping[ages][:, None, None]
     arrivals_flat = gossip_ops.gossip_drain(w_stack, state.buffer, slots)
     arrivals = flat_lib.unravel_clients(arrivals_flat, spec)
     params = jax.tree_util.tree_map(

@@ -1,0 +1,68 @@
+"""`repro.events` — the continuous-time event engine.
+
+The windowed engine discretizes DRACO's merged Poisson point process
+into superposition windows; this subsystem keeps the exact timeline:
+
+    from repro.events import EventConfig, simulate_events
+
+    cfg = EventConfig(num_clients=25, staleness="poly")
+    state, trace = simulate_events("fedasync-gossip", cfg,
+                                   task="linear-softmax", horizon=200.0,
+                                   key=key, eval_every=500)
+
+Pieces: `tape` pre-samples each run into a sorted fixed-length
+`EventTape`; `engine` scans it with per-event `lax.switch` dispatch over
+the flat parameter plane and the fused `gossip_drain`; `replay` is the
+step-by-step eager oracle (bit-for-bit); `algorithms` registers the
+family (draco-event, fedasync-gossip, event-triggered, fedasync-window);
+`driver` routes everything through the unified `repro.api.simulate`
+scan, so `simulate_sweep` grids work unchanged.
+"""
+from repro.events.config import EventConfig, STALENESS_MODES
+from repro.events.tape import (
+    EventTape,
+    KIND_GRAD,
+    KIND_TX,
+    KIND_UNIFY,
+    profiled_event_list,
+    sample_event_tape,
+    tape_capacity,
+    tape_from_events,
+)
+from repro.events.staleness import (
+    staleness_damping_vector,
+    staleness_fn,
+    staleness_scale,
+)
+from repro.events.engine import EventState, event_step, init_event_state
+from repro.events.replay import ReplayResult, replay_events
+from repro.events.driver import events_context, simulate_events
+
+# importing the module registers the event algorithm family. Keep this
+# AFTER the driver import: it pulls in repro.api, whose __init__
+# re-exports driver names from this (then partially-initialized) module.
+from repro.events import algorithms  # noqa: F401  (import side effect)
+
+__all__ = [
+    "EventConfig",
+    "EventState",
+    "EventTape",
+    "KIND_GRAD",
+    "KIND_TX",
+    "KIND_UNIFY",
+    "ReplayResult",
+    "STALENESS_MODES",
+    "algorithms",
+    "event_step",
+    "events_context",
+    "init_event_state",
+    "profiled_event_list",
+    "replay_events",
+    "sample_event_tape",
+    "simulate_events",
+    "staleness_damping_vector",
+    "staleness_fn",
+    "staleness_scale",
+    "tape_capacity",
+    "tape_from_events",
+]

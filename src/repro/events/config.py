@@ -1,0 +1,44 @@
+"""`EventConfig`: `DracoConfig` plus the event-family knobs.
+
+A plain `DracoConfig` runs every event algorithm with the defaults below
+(the algorithms read these fields via `getattr` with the same
+fallbacks), so existing configs work unchanged; `EventConfig` makes the
+knobs explicit, validated, and part of the static jit key.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.protocol import DracoConfig
+
+STALENESS_MODES = ("constant", "hinge", "poly")
+
+
+@dataclass(frozen=True)
+class EventConfig(DracoConfig):
+    # FedAsync-style staleness damping s(delta_tau) applied to arriving
+    # message weights, delta_tau measured in superposition windows:
+    #   constant: s = 1 (no damping; bit-for-bit draco-event)
+    #   hinge:    s = 1 if dt <= b else 1 / (a * (dt - b))
+    #   poly:     s = (dt + 1) ** (-a)
+    staleness: str = "constant"
+    staleness_a: float = 0.5
+    staleness_b: float = 4.0
+    # Event-triggered broadcast suppression (Zehtabi-style): a
+    # transmission event only fires if the sender's pending backlog has
+    # ||Delta||_2 >= trigger_threshold (0 = always fire).
+    trigger_threshold: float = 0.0
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.staleness not in STALENESS_MODES:
+            raise ValueError(
+                f"staleness must be one of {STALENESS_MODES}, "
+                f"got {self.staleness!r}")
+        if self.staleness_a <= 0:
+            raise ValueError(
+                f"staleness_a must be positive, got {self.staleness_a}")
+        if self.trigger_threshold < 0:
+            raise ValueError(
+                "trigger_threshold must be >= 0 (0 = always fire), "
+                f"got {self.trigger_threshold}")

@@ -1,0 +1,123 @@
+"""`simulate_events`: the continuous-timeline driver.
+
+A thin front-end over the unified `repro.api.simulate` machinery: the
+tape is sampled host-side (`repro.events.tape`), attached to the
+`SimContext` (its `tape` slot is a traced pytree child, like the
+scenario schedule), and the run is exactly `simulate(...)` with
+``num_steps == tape.capacity`` — the same jitted nested scan, in-jit
+metric cadence, and `simulate_sweep` axes, with `event_step` as the
+per-step body. Nothing is forked: event algorithms are ordinary
+registered `Algorithm`s that read `ctx.tape`.
+
+api imports are deferred into the function bodies so this module (and
+`repro.events`) can be imported before/without `repro.api` without an
+import cycle — `repro.api.__init__` imports this module to re-export
+`simulate_events`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+from repro.events.tape import EventTape, sample_event_tape
+
+
+def events_context(cfg, loss_fn=None, data: Any = None, *, task=None,
+                   params0: Any = None, horizon: Optional[float] = None,
+                   capacity: Optional[int] = None,
+                   tape: Optional[EventTape] = None, tape_seed=0,
+                   graph_key=None, scenario=None, scenario_key=None,
+                   scenario_kwargs=None):
+    """`make_context` + a sampled `EventTape` on the `tape` slot.
+
+    `horizon` is the run length in *seconds* (the tape covers [0,
+    horizon)); alternatively pass a prebuilt `tape=`. `capacity` pads
+    the tape to a fixed length (`tape_capacity` rule when omitted) so
+    grids of tapes share one compiled scan. When the context carries a
+    scenario schedule, the tape sampling respects its straggler /
+    duty-cycle rate rings (Poisson thinning; see `sample_event_tape`).
+    """
+    from repro.api.context import make_context
+
+    ctx = make_context(cfg, loss_fn, data, task=task, params0=params0,
+                       graph_key=graph_key, scenario=scenario,
+                       scenario_key=scenario_key,
+                       scenario_kwargs=scenario_kwargs)
+    if tape is None:
+        if horizon is None:
+            raise ValueError("pass horizon= (seconds) or a prebuilt tape=")
+        tape = sample_event_tape(cfg, horizon, seed=tape_seed,
+                                 schedule=ctx.schedule, capacity=capacity)
+    return ctx.replace(tape=tape)
+
+
+def simulate_events(
+    algo,
+    cfg,
+    params0=None,
+    loss_fn: Optional[Callable] = None,
+    data: Any = None,
+    *,
+    horizon: Optional[float] = None,
+    capacity: Optional[int] = None,
+    tape: Optional[EventTape] = None,
+    tape_seed=0,
+    task=None,
+    task_key=None,
+    key=None,
+    eval_every: int = 0,
+    eval_fn: Optional[Callable] = None,
+    eval_data: Any = None,
+    ctx=None,
+    state: Any = None,
+    graph_key=None,
+    scenario=None,
+    scenario_key=None,
+    scenario_kwargs=None,
+):
+    """Run an event algorithm over one sampled timeline, jit-compiled.
+
+    Args mirror `repro.api.simulate` with the step axis replaced by the
+    timeline: `horizon` (seconds) + `tape_seed` sample the merged
+    Poisson tape host-side, or pass `tape=` / a ctx from
+    `events_context`. `eval_every` counts *events* (tape rows). The
+    trace's `step` column is therefore an event index; convert to
+    seconds via the tape's `t`.
+
+    `algo` must be one of the event family ("draco-event",
+    "fedasync-gossip", "event-triggered", or any `Algorithm` whose step
+    reads `ctx.tape`). Returns `(final EventState, SimTrace)`.
+    """
+    from repro.api.simulate import resolve_workload, simulate
+
+    if ctx is not None and task is None and loss_fn is None:
+        # a prebuilt ctx already knows its workload; adopt it so
+        # resolve_workload can build params0 for the state init (a bare
+        # loss callable has no builders — pass params0 explicitly then,
+        # exactly as with `simulate`)
+        from repro.tasks import is_task
+
+        if is_task(ctx.task):
+            task = ctx.task
+        else:
+            loss_fn = ctx.task
+    task, workload, params0, data, eval_data = resolve_workload(
+        cfg, task, task_key, loss_fn, params0, data, eval_data,
+        need_params=state is None or ctx is None, need_data=ctx is None)
+    if ctx is None:
+        ctx = events_context(cfg, workload, data, params0=params0,
+                             horizon=horizon, capacity=capacity, tape=tape,
+                             tape_seed=tape_seed, graph_key=graph_key,
+                             scenario=scenario, scenario_key=scenario_key,
+                             scenario_kwargs=scenario_kwargs)
+    else:
+        if tape is not None:
+            ctx = ctx.replace(tape=tape)
+        if getattr(ctx, "tape", None) is None:
+            raise ValueError(
+                "the prebuilt ctx carries no EventTape; build it with "
+                "events_context(...) or pass tape=")
+    return simulate(algo, cfg, params0=params0,
+                    loss_fn=workload if task is None else None,
+                    num_steps=ctx.tape.capacity, task=task, key=key,
+                    eval_every=eval_every, eval_fn=eval_fn,
+                    eval_data=eval_data, ctx=ctx, state=state)

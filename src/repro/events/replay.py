@@ -1,0 +1,174 @@
+"""Step-by-step eager replay of an event tape — the engine's oracle.
+
+A deliberately independent re-implementation of the event semantics: a
+Python loop over the tape's valid rows with eager jax ops and a plain
+message *list* instead of rings — enqueue appends, the depth-D outage
+bound evicts by broadcast index, and draining walks live messages in
+send order with one ``w_due.T @ payload`` GEMM each. No `lax.switch`,
+no `gossip_drain`, no fixed-capacity buffers.
+
+It is nevertheless **bit-for-bit** equal to the scanned engine at f32
+(tests/test_event_engine.py pins it) because both sides share the exact
+contracts that determine the floats:
+
+  - RNG: the same 4-way key split per valid event, keys consumed by the
+    same sub-steps (padding rows consume nothing on either side);
+  - drain order: oldest broadcast first, one f32 GEMM accumulation per
+    live message, zero-weight messages skipped exactly (`gossip_drain`'s
+    empty-slot `cond` contributes nothing, as does skipping the GEMM);
+  - damping order: ``(w * due_mask) * s(dtau)``, the engine's
+    multiplication order;
+  - local updates: the same `core.protocol.local_step` call with the
+    same one-hot mask.
+
+This is the numpy-reference cross-view required by the windowed->event
+parity story: `core.events.event_list` (numpy) -> `tape_from_events`
+preserves the timeline verbatim, and this replay executes it one event
+at a time.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import channel as channel_lib
+from repro.core import flat as flat_lib
+from repro.core import protocol as protocol_lib
+from repro.core.protocol import Overrides
+from repro.events.tape import KIND_GRAD, KIND_TX, KIND_UNIFY
+
+
+class ReplayResult(NamedTuple):
+    """The replayed run's observable state (ring internals excluded —
+    the replay keeps messages in a list, not a ring)."""
+
+    params: Any
+    pending: jax.Array
+    opt_state: jax.Array
+    accept_count: jax.Array
+    total_accept: jax.Array
+    tx_sent: jax.Array
+    tx_count: int
+    time: float
+    positions: jax.Array
+
+
+def replay_events(state, ctx, *, damping=None,
+                  trigger: float = 0.0) -> ReplayResult:
+    """Replay `ctx.tape` from an initial `EventState`, eagerly.
+
+    Mirrors `engine.event_step` semantics with independent bookkeeping;
+    `damping`/`trigger` as there. Static-config path only (`ctx.overrides`
+    must be None or all-None — the oracle does not trace).
+    """
+    tape, cfg = ctx.tape, ctx.cfg
+    n, D = cfg.num_clients, cfg.max_delay_windows
+    spec = ctx.flat_spec
+    if spec is None:
+        spec = flat_lib.spec_of(state.params)
+    ov = ctx.overrides if ctx.overrides is not None else Overrides()
+    if any(f is not None for f in ov):
+        raise ValueError("replay_events is the static-config oracle; "
+                         "run it without traced overrides")
+
+    params, pending, opt_state = state.params, state.pending, state.opt_state
+    acc, tot, sent = state.accept_count, state.total_accept, state.tx_sent
+    key, positions = state.key, state.positions
+    txc = int(state.tx_count)
+    t = float(state.time)
+    msgs = []  # dicts: born, w (N,N), deadline (N,N), payload (N,Dflat), sent_at
+
+    valid_np = np.asarray(tape.valid)
+    kind_np = np.asarray(tape.kind)
+    client_np = np.asarray(tape.client)
+
+    for e in range(tape.capacity):
+        if not valid_np[e]:
+            continue
+        t = tape.t[e]  # jnp f32 scalar: the same bits the scan reads
+        ci = int(client_np[e])
+        kind = int(kind_np[e])
+        step_t = jnp.floor(t / cfg.window).astype(jnp.int32)
+
+        if ctx.schedule is None:
+            q, adj, sched_pos = ctx.q, ctx.adj, None
+        else:
+            v = ctx.schedule.at(step_t)
+            q, adj, sched_pos = v.q, v.adj, v.positions
+        pos = positions if sched_pos is None else sched_pos
+
+        keys = jax.random.split(key, 4)
+        key, k_gsel, k_chan = keys[0], keys[1], keys[2]
+
+        # --- drain: live messages in send order, one GEMM each ------------
+        arrivals = jnp.zeros((n, spec.dim), jnp.float32)
+        for m in msgs:
+            due = (m["deadline"] <= t).astype(m["w"].dtype)
+            w_due = m["w"] * due
+            if damping is not None:
+                w_due = w_due * damping((t - m["sent_at"]) / cfg.window)
+            if bool(jnp.any(w_due != 0)):
+                arrivals = arrivals + jax.lax.dot(
+                    w_due.T.astype(jnp.float32),
+                    m["payload"].astype(jnp.float32))
+            m["w"] = m["w"] * (m["deadline"] > t).astype(m["w"].dtype)
+        params = jax.tree_util.tree_map(
+            lambda p, a: p + a.astype(p.dtype), params,
+            flat_lib.unravel_clients(arrivals, spec))
+
+        # --- dispatch ------------------------------------------------------
+        if kind == KIND_GRAD:
+            gm = jnp.arange(n, dtype=jnp.int32) == ci
+            delta, opt_state = protocol_lib.local_step(
+                k_gsel, params, gm, cfg, ctx.task, ctx.data, opt_state,
+                step_t, lr=None)
+            pending = pending + flat_lib.ravel_clients(delta)
+            if cfg.apply_self_update:
+                params = jax.tree_util.tree_map(
+                    lambda p, dl: p + dl.astype(p.dtype), params, delta)
+        elif kind == KIND_TX:
+            sender = jnp.arange(n, dtype=jnp.int32) == ci
+            if cfg.channel is not None and cfg.channel.enabled:
+                gamma, success = channel_lib.transmission_delays(
+                    k_chan, pos, sender, cfg.channel)
+                success = success & adj
+                deadlines = (t + gamma).astype(jnp.float32)
+            else:
+                success = adj & sender[:, None]
+                deadlines = jnp.full((n, n), t, jnp.float32)
+            if trigger > 0:
+                fire = bool(jnp.sum(pending[ci] ** 2)
+                            >= jnp.float32(trigger) ** 2)
+            else:
+                fire = True
+            psi = cfg.psi
+            room = success if psi <= 0 else success & (acc[None, :] < psi)
+            accept = room & fire
+            newly = accept.sum(axis=0).astype(jnp.int32)
+            acc = acc + newly
+            tot = tot + newly
+            w_eff = q * accept.astype(q.dtype)
+            if fire:
+                msgs.append({"born": txc, "w": w_eff, "deadline": deadlines,
+                             "payload": pending, "sent_at": t})
+                txc += 1
+                # depth-D ring: broadcast txc-1 evicts broadcast txc-1-D
+                msgs = [m for m in msgs if m["born"] >= txc - D]
+                keep = ~sender
+                pending = pending * keep.astype(jnp.float32)[:, None]
+                sent = sent + sender.astype(jnp.int32)
+        elif kind == KIND_UNIFY:
+            params = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[ci][None], x.shape), params)
+            acc = jnp.zeros_like(acc)
+        else:  # pragma: no cover - tape kinds are validated at pack time
+            raise ValueError(f"unknown event kind {kind}")
+        positions = pos
+
+    return ReplayResult(params=params, pending=pending, opt_state=opt_state,
+                        accept_count=acc, total_accept=tot, tx_sent=sent,
+                        tx_count=txc, time=float(np.asarray(t)),
+                        positions=positions)

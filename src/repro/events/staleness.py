@@ -1,0 +1,58 @@
+"""Staleness-adaptive mixing weights s(delta_tau) (FedAsync families).
+
+The three damping families from the FedAsync line of work, applied to
+*gossip* rather than server aggregation: an arriving message whose
+payload is ``delta_tau`` superposition windows old has its row-stochastic
+weight scaled by ``s(delta_tau)``. ``constant`` is the identity (DRACO's
+own semantics); ``hinge`` tolerates a grace period ``b`` then decays
+hyperbolically; ``poly`` decays polynomially from the start.
+
+Two consumers:
+  - the event engine damps per-message at drain time with the *exact*
+    continuous age ``(t_now - t_sent) / window`` (`staleness_fn`);
+  - the windowed engine damps per delay bucket with the integer age via
+    the `damping=` hook of `core.protocol.draco_window`
+    (`staleness_damping_vector`).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def staleness_scale(mode: str, dtau, a: float = 0.5, b: float = 4.0):
+    """s(delta_tau) for one family; elementwise over `dtau` (windows)."""
+    dtau = jnp.asarray(dtau, jnp.float32)
+    if mode == "constant":
+        return jnp.ones_like(dtau)
+    if mode == "hinge":
+        # guard the pole at dtau == b: the branch is only taken past it
+        return jnp.where(dtau <= b, jnp.ones_like(dtau),
+                         1.0 / (a * jnp.maximum(dtau - b, 1e-6)))
+    if mode == "poly":
+        return (dtau + 1.0) ** jnp.float32(-a)
+    raise ValueError(f"unknown staleness mode {mode!r}")
+
+
+def staleness_fn(cfg):
+    """The config's damping closure ``dtau -> s(dtau)``, or None when the
+    family is constant (None keeps the undamped path bit-for-bit)."""
+    mode = getattr(cfg, "staleness", "constant")
+    if mode == "constant":
+        return None
+    a = getattr(cfg, "staleness_a", 0.5)
+    b = getattr(cfg, "staleness_b", 4.0)
+    return lambda dtau: staleness_scale(mode, dtau, a, b)
+
+
+def staleness_damping_vector(cfg):
+    """Age-indexed ``(D,)`` damping vector for the windowed drain hook.
+
+    Entry ``j`` scales the delay bucket whose messages are ``j`` windows
+    old (entry 0 is never drained — the ring walks ages 1..D-1). None
+    for the constant family, keeping `draco_window` bit-for-bit.
+    """
+    fn = staleness_fn(cfg)
+    if fn is None:
+        return None
+    ages = jnp.arange(cfg.max_delay_windows, dtype=jnp.float32)
+    return fn(ages)

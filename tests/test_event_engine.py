@@ -1,0 +1,382 @@
+"""The continuous-time event engine: tape, scan, replay parity, sweeps.
+
+The load-bearing assertion is **replay parity**: the jitted tape scan
+(`repro.events.engine`) equals the step-by-step eager oracle
+(`repro.events.replay`) bit-for-bit — same RNG contract, same drain
+order, same f32 accumulation — for every member of the algorithm
+family. Everything else (suppression, staleness, sweep integration,
+scenario-profiled tapes, padding) builds on that.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import simulate, simulate_sweep
+from repro.core.channel import ChannelConfig
+from repro.events import (
+    EventConfig,
+    EventTape,
+    KIND_GRAD,
+    KIND_TX,
+    KIND_UNIFY,
+    events_context,
+    init_event_state,
+    replay_events,
+    sample_event_tape,
+    simulate_events,
+    staleness_damping_vector,
+    staleness_scale,
+    tape_capacity,
+    tape_from_events,
+)
+from repro.events.staleness import staleness_fn
+from repro.tasks import get_task
+
+N = 5
+HORIZON = 20.0
+
+_TASK = get_task("linear-softmax")
+_KP, _KD = jax.random.split(jax.random.PRNGKey(0))
+_PARAMS0 = _TASK.init_params(_KP)
+
+
+def _cfg(**kw):
+    base = dict(num_clients=N, lr=0.05, local_batches=1, batch_size=8,
+                lambda_grad=0.4, lambda_tx=0.4, unify_period=8, psi=2,
+                topology="cycle", max_delay_windows=3, channel=None)
+    base.update(kw)
+    return EventConfig(**base)
+
+
+def _ctx(cfg, horizon=HORIZON, tape_seed=3, **kw):
+    data, _ = _TASK.make_data(_KD, cfg.num_clients)
+    return events_context(cfg, _TASK, data, params0=_PARAMS0,
+                          horizon=horizon, tape_seed=tape_seed, **kw)
+
+
+def _assert_state_equals_replay(st, rp):
+    for field in ("pending", "opt_state", "accept_count", "total_accept",
+                  "tx_sent"):
+        a = np.asarray(getattr(st, field))
+        b = np.asarray(getattr(rp, field))
+        assert (a == b).all(), (field, a, b)
+    for a, b in zip(jax.tree_util.tree_leaves(st.params),
+                    jax.tree_util.tree_leaves(rp.params)):
+        assert (np.asarray(a) == np.asarray(b)).all(), "params diverged"
+    assert int(st.tx_count) == rp.tx_count
+
+
+def _parity(cfg, algo, horizon=HORIZON):
+    ctx = _ctx(cfg, horizon=horizon)
+    key = jax.random.PRNGKey(7)
+    st, _ = simulate_events(algo, cfg, ctx=ctx, key=key)
+    st0 = init_event_state(key, cfg, _PARAMS0, task=_TASK)
+    damping = staleness_fn(cfg) if algo == "fedasync-gossip" else None
+    trigger = (float(cfg.trigger_threshold)
+               if algo == "event-triggered" else 0.0)
+    rp = replay_events(st0, ctx, damping=damping, trigger=trigger)
+    _assert_state_equals_replay(st, rp)
+    return st, rp, ctx
+
+
+# ---------------------------------------------------------------------------
+# tape construction
+# ---------------------------------------------------------------------------
+
+
+def test_tape_sorted_padded_and_counted():
+    cfg = _cfg()
+    tape = sample_event_tape(cfg, HORIZON, seed=0)
+    v = np.asarray(tape.valid)
+    t = np.asarray(tape.t)[v]
+    assert (np.diff(t) >= 0).all()
+    assert tape.capacity == tape_capacity(cfg, HORIZON)
+    assert tape.num_valid <= tape.capacity
+    c = tape.counts()
+    # 2 unifications at 8s and 16s; Poisson counts within 6 sigma
+    assert c["unify"] == 2
+    mean = N * HORIZON * 0.4
+    for kind in ("grad", "tx"):
+        assert abs(c[kind] - mean) < 6 * np.sqrt(mean) + 1
+
+
+def test_tape_overflow_raises():
+    cfg = _cfg()
+    from repro.core.events import event_list
+
+    evs = event_list(np.random.default_rng(0), N, HORIZON, 0.4, 0.4)
+    with pytest.raises(ValueError, match="exceed tape capacity"):
+        tape_from_events(evs, capacity=3)
+
+
+def test_tape_capacity_covers_peak_profile_rates():
+    """The E rule sizes from ring-modulated *peak* rates: straggler
+    slowdowns shrink the tape, a rate boost grows it."""
+    from repro.scenarios import make_schedule
+    from repro.scenarios.base import Schedule
+
+    cfg = _cfg(unify_period=0)
+    plain = tape_capacity(cfg, 100.0)
+    slow = make_schedule("straggler-profile", cfg,
+                         key=jax.random.PRNGKey(1),
+                         straggler_frac=1.0, slowdown=4.0)
+    assert slow.compute_rate is not None
+    assert tape_capacity(cfg, 100.0, schedule=slow) < plain
+    boost = Schedule(q=slow.q, adj=slow.adj, w_sym=slow.w_sym,
+                     compute_rate=jnp.full((1, N), 3.0, jnp.float32))
+    assert tape_capacity(cfg, 100.0, schedule=boost) > plain
+
+
+# ---------------------------------------------------------------------------
+# replay parity (bit-for-bit)
+# ---------------------------------------------------------------------------
+
+
+def test_draco_event_matches_replay_bitwise():
+    _parity(_cfg(), "draco-event")
+
+
+def test_draco_event_matches_replay_with_channel():
+    _parity(_cfg(channel=ChannelConfig(gamma_max=3.0)), "draco-event")
+
+
+def test_fedasync_gossip_matches_replay_bitwise():
+    _parity(_cfg(staleness="poly", staleness_a=0.7), "fedasync-gossip")
+
+
+def test_event_triggered_matches_replay_bitwise():
+    st, rp, ctx = _parity(_cfg(trigger_threshold=0.05), "event-triggered")
+    # suppression must be observable: fewer broadcasts than tx events
+    assert int(np.asarray(st.tx_sent).sum()) < ctx.tape.counts()["tx"]
+
+
+def test_padded_tape_is_noop_suffix():
+    """Extra padding rows leave the final state bit-for-bit unchanged."""
+    cfg = _cfg()
+    ctx = _ctx(cfg)
+    key = jax.random.PRNGKey(9)
+    st_a, _ = simulate_events("draco-event", cfg, ctx=ctx, key=key)
+    wide = EventTape(
+        jnp.concatenate([ctx.tape.t, ctx.tape.t[-8:]]),
+        jnp.concatenate([ctx.tape.client, ctx.tape.client[-8:]]),
+        jnp.concatenate([ctx.tape.kind, ctx.tape.kind[-8:]]),
+        jnp.concatenate([ctx.tape.valid,
+                         jnp.zeros((8,), bool)]))
+    st_b, _ = simulate_events("draco-event", cfg, ctx=ctx, tape=wide, key=key)
+    assert int(st_b.event_idx) == int(st_a.event_idx) + 8
+    for a, b in zip(jax.tree_util.tree_leaves(st_a.params),
+                    jax.tree_util.tree_leaves(st_b.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    assert (np.asarray(st_a.key) == np.asarray(st_b.key)).all()
+
+
+# ---------------------------------------------------------------------------
+# event semantics
+# ---------------------------------------------------------------------------
+
+
+def _manual_tape(rows, capacity=None):
+    t, client, kind = zip(*rows)
+    cap = capacity or len(rows)
+    pad = cap - len(rows)
+    return EventTape(
+        jnp.asarray(np.concatenate([t, [t[-1]] * pad]).astype(np.float32)),
+        jnp.asarray(np.concatenate([client, [0] * pad]).astype(np.int32)),
+        jnp.asarray(np.concatenate([kind, [0] * pad]).astype(np.int32)),
+        jnp.asarray([True] * len(rows) + [False] * pad))
+
+
+def test_delivery_waits_for_next_event():
+    """Channel off: a broadcast lands at the next strictly-later event
+    (the window->0 limit), not instantaneously."""
+    cfg = _cfg(unify_period=0, psi=0, topology="complete")
+    tape = _manual_tape([(1.0, 0, KIND_GRAD), (2.0, 0, KIND_TX),
+                         (3.0, 1, KIND_GRAD)])
+    ctx = _ctx(cfg, tape_seed=0).replace(tape=tape)
+    key = jax.random.PRNGKey(1)
+    st0 = init_event_state(key, cfg, _PARAMS0, task=_TASK)
+    p0 = jax.tree_util.tree_leaves(st0.params)[0]
+
+    # after the tx event nothing has been delivered yet...
+    two = ctx.replace(tape=_manual_tape([(1.0, 0, KIND_GRAD),
+                                         (2.0, 0, KIND_TX)]))
+    st2, _ = simulate_events("draco-event", cfg, ctx=two, key=key)
+    receivers_2 = jax.tree_util.tree_leaves(st2.params)[0][1:]
+    assert (np.asarray(receivers_2) == np.asarray(p0[1:])).all()
+    # ...but the next event (any client's) triggers the drain
+    st3, _ = simulate_events("draco-event", cfg, ctx=ctx, key=key)
+    receivers_3 = jax.tree_util.tree_leaves(st3.params)[0][1:]
+    assert not (np.asarray(receivers_3) == np.asarray(p0[1:])).all()
+    # sender never applies its own update (paper semantics)
+    assert (np.asarray(jax.tree_util.tree_leaves(st2.params)[0][0])
+            == np.asarray(p0[0])).all()
+
+
+def test_unify_event_adopts_hub_and_resets_psi():
+    cfg = _cfg(unify_period=8, psi=1, topology="complete")
+    hub = 3
+    tape = _manual_tape([(1.0, 0, KIND_GRAD), (2.0, 0, KIND_TX),
+                         (3.0, 1, KIND_GRAD), (8.0, hub, KIND_UNIFY)])
+    ctx = _ctx(cfg).replace(tape=tape)
+    key = jax.random.PRNGKey(2)
+    st, _ = simulate_events("draco-event", cfg, ctx=ctx, key=key)
+    for leaf in jax.tree_util.tree_leaves(st.params):
+        x = np.asarray(leaf)
+        assert (x == x[hub]).all()
+    assert (np.asarray(st.accept_count) == 0).all()
+    assert int(np.asarray(st.total_accept).sum()) > 0
+
+
+def test_trigger_zero_is_draco_event_bitwise():
+    cfg = _cfg(trigger_threshold=0.0)
+    ctx = _ctx(cfg)
+    key = jax.random.PRNGKey(4)
+    st_a, _ = simulate_events("draco-event", cfg, ctx=ctx, key=key)
+    st_b, _ = simulate_events("event-triggered", cfg, ctx=ctx, key=key)
+    for a, b in zip(jax.tree_util.tree_leaves(st_a.params),
+                    jax.tree_util.tree_leaves(st_b.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_constant_staleness_is_draco_event_bitwise():
+    cfg = _cfg(staleness="constant")
+    ctx = _ctx(cfg)
+    key = jax.random.PRNGKey(4)
+    st_a, _ = simulate_events("draco-event", cfg, ctx=ctx, key=key)
+    st_b, _ = simulate_events("fedasync-gossip", cfg, ctx=ctx, key=key)
+    for a, b in zip(jax.tree_util.tree_leaves(st_a.params),
+                    jax.tree_util.tree_leaves(st_b.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_staleness_families():
+    s = staleness_scale
+    np.testing.assert_allclose(np.asarray(s("constant", [0.0, 9.0])), 1.0)
+    hinge = np.asarray(s("hinge", [1.0, 4.0, 8.0], a=0.5, b=4.0))
+    np.testing.assert_allclose(hinge[:2], 1.0)
+    np.testing.assert_allclose(hinge[2], 0.5, rtol=1e-6)
+    poly = np.asarray(s("poly", [0.0, 3.0], a=0.5))
+    np.testing.assert_allclose(poly, [1.0, 0.5], rtol=1e-6)
+    with pytest.raises(ValueError):
+        s("exp", 1.0)
+    vec = staleness_damping_vector(_cfg(staleness="poly", staleness_a=0.5,
+                                        max_delay_windows=4))
+    assert vec.shape == (4,)
+    assert staleness_damping_vector(_cfg()) is None
+
+
+def test_event_config_validation():
+    with pytest.raises(ValueError, match="staleness"):
+        _cfg(staleness="exp")
+    with pytest.raises(ValueError, match="trigger_threshold"):
+        _cfg(trigger_threshold=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# scenario-profiled tapes
+# ---------------------------------------------------------------------------
+
+
+def test_profiled_tape_respects_duty_cycle():
+    """Clients with zero compute rate in off-windows fire no grad events
+    there; a fully-off client fires none at all."""
+    cfg = _cfg(unify_period=0, lambda_tx=0.0)
+    from repro.scenarios.base import Schedule
+
+    base = _ctx(cfg, tape_seed=0)
+    rate = np.ones((4, N), np.float32)
+    rate[:, 0] = 0.0           # client 0 never computes
+    rate[:2, 1] = 0.0          # client 1 off in windows 0,1 mod 4
+    sched = Schedule(q=base.schedule.q if base.schedule else base.q[None],
+                     adj=base.adj[None], w_sym=base.w_sym[None],
+                     compute_rate=jnp.asarray(rate))
+    tape = sample_event_tape(cfg, 200.0, seed=5, schedule=sched)
+    v = np.asarray(tape.valid)
+    cl = np.asarray(tape.client)[v]
+    tt = np.asarray(tape.t)[v]
+    assert (cl != 0).all()
+    w1 = np.floor(tt[cl == 1] / cfg.window).astype(int) % 4
+    assert (w1 >= 2).all()
+    assert (cl == 1).sum() > 0  # thinning kept the on-windows
+
+
+# ---------------------------------------------------------------------------
+# sweep integration
+# ---------------------------------------------------------------------------
+
+
+def test_event_family_sweeps_in_one_call():
+    """All three event algorithms run lr x psi grids through
+    `simulate_sweep` over a tape-carrying ctx; row (g, k) equals the solo
+    run bit-for-bit."""
+    cfg = _cfg()
+    ctx = _ctx(cfg)
+    keys = jax.random.split(jax.random.PRNGKey(11), 2)
+    grid = [cfg, cfg.replace(lr=0.1), cfg.replace(psi=4)]
+    for algo in ("draco-event", "fedasync-gossip", "event-triggered"):
+        finals, _ = simulate_sweep(algo, grid, ctx=ctx, keys=keys,
+                                   task=_TASK, num_steps=ctx.tape.capacity)
+        solo, _ = simulate_events(algo, grid[1], ctx=ctx.replace(cfg=grid[1]),
+                                  key=keys[1])
+        for a, b in zip(jax.tree_util.tree_leaves(finals.params),
+                        jax.tree_util.tree_leaves(solo.params)):
+            assert (np.asarray(a)[1, 1] == np.asarray(b)).all(), algo
+
+
+def test_lambda_sweep_is_rejected_for_event_algos():
+    """The Poisson rates are baked into the sampled tape — sweeping them
+    inside one compiled call would silently reuse the wrong tape."""
+    cfg = _cfg()
+    ctx = _ctx(cfg)
+    with pytest.raises(ValueError, match="does not consume"):
+        simulate_sweep("draco-event", [cfg, cfg.replace(lambda_tx=0.8)],
+                       ctx=ctx, task=_TASK, key=jax.random.PRNGKey(0),
+                       num_seeds=1, num_steps=ctx.tape.capacity)
+
+
+def test_fedasync_window_constant_is_draco_bitwise():
+    """The windowed damping hook with a constant family is a no-op."""
+    cfg = _cfg(staleness="constant")
+    data, _ = _TASK.make_data(_KD, cfg.num_clients)
+    key = jax.random.PRNGKey(3)
+    st_a, _ = simulate("draco", cfg, task=_TASK, data=data,
+                       params0=_PARAMS0, num_steps=40, key=key)
+    st_b, _ = simulate("fedasync-window", cfg, task=_TASK, data=data,
+                       params0=_PARAMS0, num_steps=40, key=key)
+    for a, b in zip(jax.tree_util.tree_leaves(st_a.params),
+                    jax.tree_util.tree_leaves(st_b.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_fedasync_window_damps_arrivals():
+    """A poly family shrinks what arrives vs. undamped DRACO."""
+    cfg = _cfg(staleness="poly", staleness_a=2.0, unify_period=0,
+               topology="complete")
+    data, _ = _TASK.make_data(_KD, cfg.num_clients)
+    key = jax.random.PRNGKey(3)
+    st_a, _ = simulate("draco", cfg, task=_TASK, data=data,
+                       params0=_PARAMS0, num_steps=40, key=key)
+    st_b, _ = simulate("fedasync-window", cfg, task=_TASK, data=data,
+                       params0=_PARAMS0, num_steps=40, key=key)
+    # same events, same sends — only the mixing weights differ
+    moved_a = sum(float(np.abs(np.asarray(l) - np.asarray(l0)).sum())
+                  for l, l0 in zip(jax.tree_util.tree_leaves(st_a.params),
+                                   jax.tree_util.tree_leaves(
+                                       _TASK.init_params(_KP))))
+    moved_b = sum(float(np.abs(np.asarray(l) - np.asarray(l0)).sum())
+                  for l, l0 in zip(jax.tree_util.tree_leaves(st_b.params),
+                                   jax.tree_util.tree_leaves(
+                                       _TASK.init_params(_KP))))
+    assert moved_a != moved_b
+
+
+def test_grads_per_step_and_budget():
+    from repro.api import steps_for_budget
+
+    cfg = _cfg(lambda_grad=0.3, lambda_tx=0.1)
+    from repro.api import get_algorithm
+
+    r = get_algorithm("draco-event").grads_per_step(cfg)
+    np.testing.assert_allclose(r, 0.3 / (N * 0.4), rtol=1e-6)
+    assert steps_for_budget("draco-event", cfg, 10.0) == round(10.0 / r)

@@ -91,3 +91,59 @@ def test_event_list_per_client_independence():
     for e in evs:
         counts[e.client] += 1
     assert counts[0] > counts[1] > counts[2] == 0
+
+
+def test_sample_event_counts_high_rate_unbiased():
+    """Regression: the old fixed ``max_count=8`` clipped any client with
+    lam*w above ~4 (Pareto straggler profiles reach lam*w ~ 20), biasing
+    its mean event count low. The default now sizes the truncation from
+    the rate (mean + 6 sigma), pinning the clipped tail mass to ~0."""
+    from repro.core.events import poisson_truncation_bound, sample_event_counts
+
+    lam, w, n, reps = 20.0, 1.0, 256, 40
+    key = jax.random.PRNGKey(0)
+    tot_new = tot_old = 0.0
+    peak = 0
+    for i in range(reps):
+        k = jax.random.fold_in(key, i)
+        c_new = sample_event_counts(k, lam, w, n)
+        c_old = sample_event_counts(k, lam, w, n, max_count=8)
+        tot_new += float(c_new.sum())
+        tot_old += float(c_old.sum())
+        peak = max(peak, int(c_new.max()))
+    mean_new = tot_new / (n * reps)
+    mean_old = tot_old / (n * reps)
+    # unbiased within 4 sigma of the sample mean...
+    assert abs(mean_new - lam * w) < 4 * np.sqrt(lam * w / (n * reps))
+    # ...while the legacy cap pinned everything at 8
+    assert mean_old <= 8.0
+    assert abs(mean_old - 8.0) < 0.05
+    # the sized bound actually covers the samples (tail mass ~1e-9)
+    bound = poisson_truncation_bound(lam * w)
+    assert peak <= bound
+    assert bound < lam * w + 7 * np.sqrt(lam * w)
+
+
+def test_truncation_bound_monotone_and_floored():
+    from repro.core.events import poisson_truncation_bound
+
+    bounds = [poisson_truncation_bound(x) for x in (0.0, 0.5, 2.0, 50.0)]
+    assert bounds == sorted(bounds)
+    assert bounds[0] >= 6  # near-zero rates still admit stray events
+
+
+def test_event_list_hub_three_views_agree():
+    """event_list, the packed EventTape, and the window engine's `_unify`
+    name the same rotating hub for every unification."""
+    from repro.events import KIND_UNIFY, tape_from_events
+
+    n, P = 4, 3
+    rng = np.random.default_rng(2)
+    evs = event_list(rng, n=n, horizon=10 * P + 0.5, lam_grad=0.2,
+                     lam_tx=0.2, unify_period=float(P))
+    tape = tape_from_events(evs, capacity=len(evs) + 5)
+    kinds = np.asarray(tape.kind)[np.asarray(tape.valid)]
+    clients = np.asarray(tape.client)[np.asarray(tape.valid)]
+    tape_hubs = clients[kinds == KIND_UNIFY].tolist()
+    assert tape_hubs == [e.client for e in evs if e.kind == "unify"]
+    assert tape_hubs == [unify_hub(k, n) for k in range(1, 11)]

@@ -254,3 +254,39 @@ def test_over_delay_links_are_dropped(task, monkeypatch):
             np.asarray(st_f2.delay_ring[0]) == age)
         mixed = w_age.T @ np.asarray(st_f2.buffer[0])
         np.testing.assert_allclose(flat_legacy[slot], mixed, atol=1e-6)
+
+
+def test_event_timeline_cross_view_bitwise(task):
+    """Cross-view: the exact `event_list` timeline replayed message-by-
+    message (`repro.events.replay`) equals the jit-scanned tape engine
+    bit-for-bit — params, Psi counters, broadcast counts — and the
+    tape's unification rows follow the same rotating-hub rule as the
+    window engine (`unify_hub`)."""
+    from repro.core.events import unify_hub
+    from repro.events import (
+        KIND_UNIFY,
+        events_context,
+        init_event_state,
+        replay_events,
+        simulate_events,
+    )
+
+    train, _, params0, loss, _ = task
+    cfg = _cfg(unify_period=6, psi=1, lambda_grad=0.5, lambda_tx=0.5)
+    ctx = events_context(cfg, loss, train, params0=params0, horizon=12.0)
+    key = jax.random.PRNGKey(5)
+    st, _ = simulate_events("draco-event", cfg, params0=params0, ctx=ctx,
+                            key=key)
+    rp = replay_events(init_event_state(key, cfg, params0), ctx)
+    for a, b in zip(jax.tree_util.tree_leaves(st.params),
+                    jax.tree_util.tree_leaves(rp.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    assert (np.asarray(st.pending) == np.asarray(rp.pending)).all()
+    assert (np.asarray(st.accept_count) == np.asarray(rp.accept_count)).all()
+    assert (np.asarray(st.total_accept) == np.asarray(rp.total_accept)).all()
+    assert (np.asarray(st.tx_sent) == np.asarray(rp.tx_sent)).all()
+    assert int(st.tx_count) == rp.tx_count
+    kinds = np.asarray(ctx.tape.kind)[np.asarray(ctx.tape.valid)]
+    hubs = np.asarray(ctx.tape.client)[np.asarray(ctx.tape.valid)]
+    hubs = hubs[kinds == KIND_UNIFY].tolist()
+    assert hubs == [unify_hub(k, N) for k in range(1, len(hubs) + 1)]

@@ -91,3 +91,52 @@ def test_client_variance_bounded_by_unification():
     spread = float(jnp.linalg.norm(x - x.mean(0, keepdims=True), axis=-1).max())
     scale = float(jnp.linalg.norm(cs, axis=-1).mean())
     assert spread < scale  # local models stay clustered
+
+
+def test_windowed_engine_converges_to_event_engine_as_window_shrinks():
+    """Window->0 limit: the superposition-window discretization loses
+    events (a window collapses multiple Poisson points into one mask
+    bit, expected firings per unit time (1-exp(-lam w))/w < lam), so a
+    coarse-window run converges *slower* than the exact timeline. As the
+    window shrinks at fixed rates/horizon, the windowed engine's mean
+    final distance to the optimum approaches `simulate_events`' within
+    seed noise."""
+    from repro.api import simulate
+    from repro.events import simulate_events
+
+    horizon, K = 10.0, 8
+    params0, loss, cs, c_bar, data = _quad_task(jax.random.PRNGKey(42))
+
+    def cfg_w(w):
+        return DracoConfig(num_clients=N, lr=0.08, local_batches=1,
+                           batch_size=8, lambda_grad=0.9, lambda_tx=0.9,
+                           unify_period=0, psi=0, topology="complete",
+                           max_delay_windows=3, channel=None, window=w)
+
+    def dist(st):
+        return float(jnp.linalg.norm(st.params["x"].mean(0) - c_bar))
+
+    def mean_final(run):
+        return float(np.mean([run(s) for s in range(K)]))
+
+    windows = (1.0, 0.5, 0.25, 0.125)
+    d_win = [
+        mean_final(lambda s, w=w: dist(simulate(
+            "draco", cfg_w(w), params0=params0, loss_fn=loss, data=data,
+            num_steps=int(round(horizon / w)),
+            key=jax.random.PRNGKey(100 + s))[0]))
+        for w in windows
+    ]
+    d_ev = mean_final(lambda s: dist(simulate_events(
+        "draco-event", cfg_w(1.0), params0=params0, loss_fn=loss, data=data,
+        horizon=horizon, tape_seed=1000 + s,
+        key=jax.random.PRNGKey(100 + s))[0]))
+
+    errs = [abs(d - d_ev) for d in d_win]
+    # the discretization gap is visible at w=1 and collapses by w=1/8
+    # (probe: 0.120 -> 0.068 -> 0.029 -> 0.007 against seed noise ~0.03)
+    assert errs[0] > 0.06, (errs, d_ev)
+    assert errs[-1] < 0.4 * errs[0], (errs, d_ev)
+    assert errs[-1] < 0.1, (errs, d_ev)
+    # and the coarse-window runs sit *above* the exact timeline
+    assert d_win[0] > d_ev
