@@ -27,6 +27,8 @@ call is rejected — resample tapes host-side instead).
 """
 from __future__ import annotations
 
+import numpy as np
+
 from repro.api.algorithm import register_algorithm
 from repro.api.algorithms import Draco, _view
 from repro.core import protocol as protocol_lib
@@ -61,11 +63,13 @@ class _EventAlgo:
         # one tape row is one merged-process event; a fraction
         # lambda_grad / (lambda_grad + lambda_tx) of them are gradient
         # events, each owned by a single client (vs. the windowed
-        # engine's per-client thinning)
-        lam = cfg.lambda_grad + cfg.lambda_tx
+        # engine's per-client thinning). Rates may be per-client arrays
+        # (profiled tapes) — reduce to the merged-process totals first.
+        lam_g = float(np.sum(cfg.lambda_grad))
+        lam = lam_g + float(np.sum(cfg.lambda_tx))
         if lam <= 0:
             return 0.0
-        return cfg.lambda_grad / (cfg.num_clients * lam)
+        return lam_g / (cfg.num_clients * lam)
 
 
 @register_algorithm("draco-event")

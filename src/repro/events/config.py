@@ -19,7 +19,7 @@ class EventConfig(DracoConfig):
     # FedAsync-style staleness damping s(delta_tau) applied to arriving
     # message weights, delta_tau measured in superposition windows:
     #   constant: s = 1 (no damping; bit-for-bit draco-event)
-    #   hinge:    s = 1 if dt <= b else 1 / (a * (dt - b))
+    #   hinge:    s = 1 if dt <= b else 1 / (a * (dt - b) + 1)
     #   poly:     s = (dt + 1) ** (-a)
     staleness: str = "constant"
     staleness_a: float = 0.5
@@ -38,6 +38,9 @@ class EventConfig(DracoConfig):
         if self.staleness_a <= 0:
             raise ValueError(
                 f"staleness_a must be positive, got {self.staleness_a}")
+        if self.staleness_b < 0:
+            raise ValueError(
+                f"staleness_b must be >= 0, got {self.staleness_b}")
         if self.trigger_threshold < 0:
             raise ValueError(
                 "trigger_threshold must be >= 0 (0 = always fire), "

@@ -25,9 +25,8 @@ def staleness_scale(mode: str, dtau, a: float = 0.5, b: float = 4.0):
     if mode == "constant":
         return jnp.ones_like(dtau)
     if mode == "hinge":
-        # guard the pole at dtau == b: the branch is only taken past it
-        return jnp.where(dtau <= b, jnp.ones_like(dtau),
-                         1.0 / (a * jnp.maximum(dtau - b, 1e-6)))
+        # FedAsync hinge: continuous at the grace period b and <= 1
+        return 1.0 / (a * jnp.maximum(dtau - b, 0.0) + 1.0)
     if mode == "poly":
         return (dtau + 1.0) ** jnp.float32(-a)
     raise ValueError(f"unknown staleness mode {mode!r}")

@@ -255,7 +255,12 @@ def test_staleness_families():
     np.testing.assert_allclose(np.asarray(s("constant", [0.0, 9.0])), 1.0)
     hinge = np.asarray(s("hinge", [1.0, 4.0, 8.0], a=0.5, b=4.0))
     np.testing.assert_allclose(hinge[:2], 1.0)
-    np.testing.assert_allclose(hinge[2], 0.5, rtol=1e-6)
+    np.testing.assert_allclose(hinge[2], 1.0 / 3.0, rtol=1e-6)
+    # continuous at the grace period and bounded by 1 (no pole at b)
+    near_b = np.asarray(s("hinge", [4.0 + 1e-6, 4.5, 100.0], a=0.5, b=4.0))
+    np.testing.assert_allclose(near_b[0], 1.0, rtol=1e-5)
+    assert (near_b <= 1.0).all() and (near_b > 0.0).all()
+    assert near_b[0] > near_b[1] > near_b[2]
     poly = np.asarray(s("poly", [0.0, 3.0], a=0.5))
     np.testing.assert_allclose(poly, [1.0, 0.5], rtol=1e-6)
     with pytest.raises(ValueError):
@@ -271,6 +276,8 @@ def test_event_config_validation():
         _cfg(staleness="exp")
     with pytest.raises(ValueError, match="trigger_threshold"):
         _cfg(trigger_threshold=-1.0)
+    with pytest.raises(ValueError, match="staleness_b"):
+        _cfg(staleness_b=-1.0)
 
 
 # ---------------------------------------------------------------------------
