@@ -10,9 +10,7 @@ For a ~100M-parameter run on real hardware:
   PYTHONPATH=src python examples/train_lm_federated.py
 """
 import argparse
-import sys
 
-from repro.configs.base import get_reduced
 from repro.launch.train import main as train_main
 
 

@@ -1,0 +1,40 @@
+#!/usr/bin/env python
+"""Run the full lint stack locally: repro.analysis, then ruff (if
+installed — ruff is a dev dependency, see requirements-dev.txt).
+
+    python scripts/lint.py            # analyzer + ruff, human output
+    python scripts/lint.py --strict   # what CI runs (warnings fail)
+
+Extra args are forwarded to `python -m repro.analysis`.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main() -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"), env.get("PYTHONPATH")) if p)
+
+    analysis = subprocess.call(
+        [sys.executable, "-m", "repro.analysis", "src", "tests",
+         *sys.argv[1:]], cwd=REPO, env=env)
+
+    ruff = 0
+    if shutil.which("ruff"):
+        ruff = subprocess.call(["ruff", "check", "."], cwd=REPO)
+    else:
+        print("ruff not installed; skipping the generic-Python layer "
+              "(pip install -r requirements-dev.txt)", file=sys.stderr)
+
+    return analysis or ruff
+
+
+if __name__ == "__main__":
+    sys.exit(main())

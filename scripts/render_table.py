@@ -1,6 +1,5 @@
 """Render results/dryrun.jsonl into the EXPERIMENTS.md roofline table."""
 import json
-import sys
 from collections import OrderedDict
 
 

@@ -1,0 +1,50 @@
+"""`repro.analysis`: the repo's JAX-aware static analyzer.
+
+The correctness story of this reproduction rests on invariants the type
+system never sees: the per-event RNG key split discipline every
+replay-vs-scan parity battery depends on, no Python branching on traced
+values inside `simulate`'s scan, hashable jit keys for every config, no
+host synchronization inside compiled bodies, and the documented
+``(N, Dflat)`` / ``(D, N, Dflat)`` / ``(D, N, N)`` plane contracts.
+This package encodes them as lint rules over the Python AST — pure
+stdlib, no jax import required, so the lint gate runs anywhere.
+
+Usage:
+
+    python -m repro.analysis src tests            # human-readable
+    python -m repro.analysis src tests --strict   # CI gate (warnings fail)
+    python -m repro.analysis src --json report.json
+
+Suppressions are per-rule and *must* carry a reason::
+
+    x = f(key)  # repro-lint: disable=RNG-KEY-REUSE(parity oracle reuses
+                # the stream on purpose)
+
+A suppression without a reason does not suppress — it raises
+SUPPRESS-NO-REASON instead. See EXPERIMENTS.md "Static analysis" for
+the rule table and policy.
+"""
+from repro.analysis.core import (
+    Finding,
+    Rule,
+    RULES,
+    SourceFile,
+    analyze_paths,
+    iter_python_files,
+    register_rule,
+    report_json,
+)
+
+# Importing the rules package registers every built-in rule.
+from repro.analysis import rules as _rules  # noqa: F401
+
+__all__ = [
+    "Finding",
+    "Rule",
+    "RULES",
+    "SourceFile",
+    "analyze_paths",
+    "iter_python_files",
+    "register_rule",
+    "report_json",
+]

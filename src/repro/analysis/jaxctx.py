@@ -1,0 +1,351 @@
+"""Traced-context inference: which functions run under `jax.jit`, and
+which of their names hold traced values.
+
+Three ways a function becomes a *traced context*:
+
+1. **Direct jit**: decorated with ``@jax.jit`` / ``@partial(jax.jit,
+   static_argnames=...)``, or bound via ``g = jax.jit(f, ...)``.
+   ``static_argnames`` / ``static_argnums`` mark the static params.
+2. **Combinator body**: passed (by name, in the same module) to
+   ``jax.lax.scan`` / ``cond`` / ``switch`` / ``while_loop`` /
+   ``fori_loop`` / ``jax.vmap`` / ``jax.grad`` / ... — every param is
+   traced.
+3. **In-module call propagation**: called from a traced context; a
+   param is traced iff some call site binds it to an expression that
+   references a traced name. Iterated to a fixpoint, so
+   ``run_windows (jit) -> step (scan body) -> draco_window`` marks
+   `draco_window`'s state/q/adj/data params traced while its `cfg`
+   (bound to a static name) stays static.
+
+Cross-module call sites can't be seen from one AST, so the known scan
+bodies of this repo (`repro.api.simulate`'s algorithm `step` adapters,
+`repro.events.engine.event_step`, `core.protocol.draco_window*`) are
+seeded via ``TRACED_ENTRY_POINTS``.
+
+Staticness heuristics (tuned to this codebase, kept deliberately
+conservative so every finding is actionable):
+
+- params named in ``STATIC_PARAM_NAMES`` (configs, tasks, specs,
+  callables — all hashable jit aux data here) are static;
+- params with literal int/float/bool/str defaults or annotations are
+  static (they are Python-level knobs bound via `partial`);
+- attribute chains are cut static at ``STATIC_ATTRS`` — `ctx.cfg`,
+  `ctx.task`, `ctx.flat_spec` ride `SimContext`'s pytree aux slot, and
+  `.shape` / `.ndim` / `.dtype` / `.size` are static trace metadata;
+- ``x is None`` / ``x is not None`` tests, and ``isinstance`` /
+  ``hasattr`` / ``callable`` / ``len`` calls, are Python-structure
+  checks, never value reads;
+- inside an ``if isinstance(x, ...)`` body, `x` is narrowed static
+  (the `_psi_accept` static-vs-traced psi dispatch pattern).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+# Functions scanned/jitted from *other* modules (the known scan-body
+# call sites the rule docs name): every param but the listed statics is
+# treated as traced.
+TRACED_ENTRY_POINTS: Dict[str, Set[str]] = {
+    # core.protocol — scan bodies of run_windows / the api adapters
+    "draco_window": {"cfg", "task", "spec"},
+    "draco_window_legacy": {"cfg", "loss_fn"},
+    # events.engine — per-tape-row scan body of the unified simulate scan;
+    # ctx is a traced pytree (its cfg/task/flat_spec aux slots are cut
+    # static by STATIC_ATTRS)
+    "event_step": set(),
+    # core.baselines — round fns driven by the api adapters' scan
+    "sync_symm_round": {"cfg", "task"},
+    "sync_push_round": {"cfg", "task"},
+    "async_symm_round": {"cfg", "task"},
+    "async_push_round": {"cfg", "task"},
+}
+
+STATIC_PARAM_NAMES = {
+    "self", "cls", "cfg", "config", "task", "spec", "loss_fn", "eval_fn",
+    "final_fn", "metric_name", "algo", "method", "mesh", "client_axes",
+    "axis_name", "num_steps", "num_windows", "num_rounds", "eval_every",
+}
+
+# Attribute names that cut a traced chain static: SimContext aux slots
+# plus array trace metadata.
+STATIC_ATTRS = {"cfg", "task", "flat_spec", "shape", "ndim", "dtype", "size"}
+
+# Structural predicates — reading them never forces a traced value.
+STRUCTURAL_CALLS = {"isinstance", "hasattr", "callable", "len", "type",
+                    "issubclass", "getattr", "id", "repr"}
+
+_JIT_NAMES = {("jax", "jit"), ("jit",)}
+# combinator -> indices of its function-valued operands
+_COMBINATORS = {
+    "scan": (0,), "while_loop": (0, 1), "fori_loop": (2,),
+    "cond": (1, 2, 3), "switch": (1,), "map": (0,),
+    "associative_scan": (0,), "vmap": (0,), "pmap": (0,), "grad": (0,),
+    "value_and_grad": (0,), "checkpoint": (0,), "remat": (0,),
+    "custom_jvp": (0,), "custom_vjp": (0,),
+}
+
+
+def dotted(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """`a.b.c` -> ("a", "b", "c"); None for non-name-rooted expressions."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    d = dotted(node)
+    return d is not None and (d in _JIT_NAMES or d[-1] == "jit")
+
+
+def _literal_static_default(default: Optional[ast.AST]) -> bool:
+    return isinstance(default, ast.Constant) and isinstance(
+        default.value, (int, float, bool, str))
+
+
+def _static_annotation(ann: Optional[ast.AST]) -> bool:
+    if ann is None:
+        return False
+    d = dotted(ann)
+    return d is not None and d[-1] in {"int", "float", "bool", "str"}
+
+
+def _parse_static_argnames(call: ast.Call) -> Set[str]:
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+    return names
+
+
+def _parse_static_argnums(call: ast.Call) -> Set[int]:
+    nums: Set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    nums.add(n.value)
+    return nums
+
+
+@dataclasses.dataclass
+class TracedContext:
+    func: ast.FunctionDef
+    origin: str  # human-readable: "@jax.jit", "lax.scan body", ...
+    traced_params: Set[str]
+
+
+def _param_names(func) -> List[str]:
+    a = func.args
+    return ([p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+            + [p.arg for p in a.kwonlyargs])
+
+
+def _default_static_params(func) -> Set[str]:
+    """Params static by naming convention, literal default or annotation."""
+    a = func.args
+    static: Set[str] = set()
+    pos = list(a.posonlyargs) + list(a.args)
+    # defaults align with the *tail* of the positional params
+    pos_defaults = [None] * (len(pos) - len(a.defaults)) + list(a.defaults)
+    for p, d in zip(pos, pos_defaults):
+        if (p.arg in STATIC_PARAM_NAMES or _literal_static_default(d)
+                or _static_annotation(p.annotation)):
+            static.add(p.arg)
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if (p.arg in STATIC_PARAM_NAMES or _literal_static_default(d)
+                or _static_annotation(p.annotation)):
+            static.add(p.arg)
+    return static
+
+
+class FunctionIndex:
+    """Per-module index of functions and their traced contexts."""
+
+    def __init__(self, tree: ast.Module):
+        self.tree = tree
+        self.functions: List[ast.FunctionDef] = []
+        self.by_name: Dict[str, ast.FunctionDef] = {}
+        self.parent: Dict[ast.AST, Optional[ast.AST]] = {}
+        self._collect(tree, None)
+        self.contexts: Dict[ast.FunctionDef, TracedContext] = {}
+        self._find_direct_jit()
+        self._find_combinator_bodies()
+        self._seed_entry_points()
+        self._propagate_calls()
+
+    # -- collection ---------------------------------------------------------
+
+    def _collect(self, node: ast.AST, parent_func) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions.append(child)
+                self.parent[child] = parent_func
+                # innermost definition wins for name lookup, matching the
+                # "same scope or enclosing" resolution rules closely enough
+                self.by_name.setdefault(child.name, child)
+                self._collect(child, child)
+            else:
+                self._collect(child, parent_func)
+
+    def _mark(self, func, origin: str, static: Set[str]) -> None:
+        traced = (set(_param_names(func)) - static
+                  - _default_static_params(func))
+        ctxt = self.contexts.get(func)
+        if ctxt is None:
+            self.contexts[func] = TracedContext(func, origin, traced)
+        else:
+            ctxt.traced_params |= traced
+
+    # -- direct jit ---------------------------------------------------------
+
+    def _find_direct_jit(self) -> None:
+        for func in self.functions:
+            for deco in func.decorator_list:
+                static = self._jit_static_of(deco, func)
+                if static is not None:
+                    self._mark(func, "@jax.jit", static)
+        # g = jax.jit(f, static_argnames=...) / functools.partial forms
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            call = node.value
+            if not isinstance(call, ast.Call):
+                continue
+            static = self._jit_call_static(call)
+            if static is None:
+                continue
+            target = call.args[0] if call.args else None
+            d = dotted(target) if target is not None else None
+            if d is not None and len(d) == 1 and d[0] in self.by_name:
+                self._mark(self.by_name[d[0]], "jax.jit(...)", static)
+
+    def _jit_static_of(self, deco: ast.AST, func) -> Optional[Set[str]]:
+        """Static params if `deco` makes `func` jitted, else None."""
+        if _is_jit_ref(deco):
+            return set()
+        if isinstance(deco, ast.Call):
+            if _is_jit_ref(deco.func):  # @jax.jit(static_argnames=...)
+                return self._statics_from(deco, func)
+            d = dotted(deco.func)
+            if d is not None and d[-1] == "partial" and deco.args \
+                    and _is_jit_ref(deco.args[0]):
+                return self._statics_from(deco, func)
+        return None
+
+    def _jit_call_static(self, call: ast.Call) -> Optional[Set[str]]:
+        """Static params if `call` is jax.jit(f, ...) or partial(jax.jit,
+        f-less, ...) applied later — else None."""
+        if _is_jit_ref(call.func):
+            return self._statics_from(call, None)
+        d = dotted(call.func)
+        if d is not None and d[-1] == "partial" and call.args \
+                and _is_jit_ref(call.args[0]):
+            return self._statics_from(call, None)
+        return None
+
+    def _statics_from(self, call: ast.Call, func) -> Set[str]:
+        static = _parse_static_argnames(call)
+        if func is not None:
+            names = _param_names(func)
+            for i in _parse_static_argnums(call):
+                if i < len(names):
+                    static.add(names[i])
+        return static
+
+    # -- combinator bodies --------------------------------------------------
+
+    def _find_combinator_bodies(self) -> None:
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if d is None or d[-1] not in _COMBINATORS:
+                continue
+            if len(d) >= 2 and d[-2] not in {"lax", "jax"}:
+                continue  # e.g. some_dict.map(...)
+            if len(d) == 1 and d[0] not in {"vmap", "grad", "scan", "cond",
+                                            "switch"}:
+                continue
+            for idx in _COMBINATORS[d[-1]]:
+                if idx >= len(node.args):
+                    continue
+                arg = node.args[idx]
+                refs = [arg]
+                # lax.switch takes a *sequence* of branch callables
+                if isinstance(arg, (ast.Tuple, ast.List)):
+                    refs = list(arg.elts)
+                for ref in refs:
+                    rd = dotted(ref)
+                    if rd is not None and len(rd) == 1 \
+                            and rd[0] in self.by_name:
+                        self._mark(self.by_name[rd[0]],
+                                   f"lax.{d[-1]} body", set())
+
+    # -- entry points + call propagation ------------------------------------
+
+    def _seed_entry_points(self) -> None:
+        for name, static in TRACED_ENTRY_POINTS.items():
+            func = self.by_name.get(name)
+            if func is not None:
+                self._mark(func, "known scan-body call site", set(static))
+
+    def _propagate_calls(self) -> None:
+        from repro.analysis.tracedness import traced_names_at_calls
+
+        for _ in range(8):  # fixpoint (module call graphs are shallow)
+            changed = False
+            for func, ctxt in list(self.contexts.items()):
+                for call, traced_args in traced_names_at_calls(
+                        func, ctxt.traced_params):
+                    d = dotted(call.func)
+                    if d is None or len(d) != 1:
+                        continue
+                    callee = self.by_name.get(d[0])
+                    if callee is None or callee is func:
+                        continue
+                    bound = self._bind(callee, call, traced_args)
+                    if not bound:
+                        continue
+                    prev = self.contexts.get(callee)
+                    before = set(prev.traced_params) if prev else None
+                    self._mark(callee, f"called from {func.name}",
+                               set(_param_names(callee)) - bound)
+                    after = self.contexts[callee].traced_params
+                    if before != after:
+                        changed = True
+            if not changed:
+                return
+
+    def _bind(self, callee, call: ast.Call, traced_args) -> Set[str]:
+        """Param names of `callee` receiving traced arguments at `call`.
+
+        `traced_args` maps id(arg-node) -> bool (argument expression
+        references a traced name at the call site)."""
+        names = _param_names(callee)
+        a = callee.args
+        pos_names = [p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+        traced: Set[str] = set()
+        for i, arg in enumerate(call.args):
+            if isinstance(arg, ast.Starred):
+                break
+            if i < len(pos_names) and traced_args.get(id(arg), False):
+                traced.add(pos_names[i])
+        for kw in call.keywords:
+            if kw.arg is not None and kw.arg in names \
+                    and traced_args.get(id(kw.value), False):
+                traced.add(kw.arg)
+        return traced
+
+    # -- public -------------------------------------------------------------
+
+    def traced_contexts(self) -> Iterator[TracedContext]:
+        return iter(self.contexts.values())

@@ -1,0 +1,18 @@
+"""Built-in rules. Importing this package registers them all.
+
+| rule id              | guards                                            |
+|----------------------|---------------------------------------------------|
+| RNG-KEY-REUSE        | one key, one consumption (split/fold_in renews)   |
+| TRACED-PY-BRANCH     | no Python control flow on traced values           |
+| HOST-SYNC-IN-JIT     | no device->host pulls inside compiled bodies      |
+| JIT-RECOMPILE-HAZARD | unhashable jit args / per-call jit / array consts |
+| DTYPE-PLANE-CONTRACT | documented (N, Dflat)/(D, N, Dflat)/(D, N, N)     |
+| MARKER-DISCIPLINE    | parity/mesh/hypothesis batteries marked slow      |
+"""
+from repro.analysis.rules import (  # noqa: F401  (import = register)
+    contracts,
+    jit,
+    markers,
+    rng,
+    trace,
+)

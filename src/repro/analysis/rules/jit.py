@@ -1,0 +1,149 @@
+"""JIT-RECOMPILE-HAZARD: things that silently defeat the jit cache.
+
+Three sub-patterns, all directly relevant to `simulate_sweep`'s
+one-compile promise and the ROADMAP's 10^4+-client scale-up:
+
+1. a directly-jitted function takes a ``dict``/``list``/``set``
+   parameter (by annotation or mutable default) that is not in
+   ``static_argnames`` — unhashable leaves force retraces or errors;
+2. a jit wrapper is built where it cannot be cached: ``jax.jit(f)(x)``
+   immediately invoked (the wrapper — and its compile cache — is
+   discarded after one call), or ``jax.jit`` called inside a
+   ``for``/``while`` body (a fresh wrapper, and a fresh trace, per
+   iteration). Binding a wrapper once inside a function and reusing
+   it is fine and is not flagged;
+3. a jitted function closes over a module-level ``np``/``jnp`` array
+   constant — the constant is baked into the jaxpr (bloating it and,
+   for `np`, re-transferred per trace); pass it as an argument or hoist
+   it into the carry. Reported as a *warning* (it is a cost, not a
+   bug), so it gates only under ``--strict``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Set
+
+from repro.analysis.core import Finding, SourceFile, register_rule
+from repro.analysis.jaxctx import FunctionIndex, _is_jit_ref, dotted
+
+RULE = "JIT-RECOMPILE-HAZARD"
+
+_MUTABLE_ANNOS = {"dict", "list", "set", "Dict", "List", "Set",
+                  "MutableMapping", "DefaultDict"}
+_ARRAY_MAKERS = {"array", "asarray", "ones", "zeros", "arange", "linspace",
+                 "eye", "full", "empty", "identity"}
+_ARRAY_ROOTS = {"np", "numpy", "onp", "jnp"}
+
+
+def _mutable_annotation(ann: Optional[ast.AST]) -> Optional[str]:
+    if ann is None:
+        return None
+    node = ann.value if isinstance(ann, ast.Subscript) else ann
+    d = dotted(node)
+    if d is not None and d[-1] in _MUTABLE_ANNOS:
+        return d[-1]
+    return None
+
+
+def _module_array_constants(tree: ast.Module) -> Dict[str, int]:
+    """name -> lineno of module-level `X = np.array(...)`-style binds."""
+    consts: Dict[str, int] = {}
+    for stmt in tree.body:
+        if not isinstance(stmt, ast.Assign) \
+                or not isinstance(stmt.value, ast.Call):
+            continue
+        d = dotted(stmt.value.func)
+        if d is None or len(d) < 2 or d[0] not in _ARRAY_ROOTS \
+                or d[-1] not in _ARRAY_MAKERS:
+            continue
+        for t in stmt.targets:
+            if isinstance(t, ast.Name):
+                consts[t.id] = stmt.lineno
+    return consts
+
+
+@register_rule(
+    RULE,
+    "jit cache defeats: unhashable (dict/list/set) jit params outside "
+    "static_argnames, jax.jit called per-invocation, jitted closure over "
+    "module-level array constants")
+def check_recompile_hazards(src: SourceFile) -> Iterator[Finding]:
+    if src.tree is None:
+        return
+    index = FunctionIndex(src.tree)
+    jitted = [c for c in index.traced_contexts()
+              if c.origin in ("@jax.jit", "jax.jit(...)")]
+
+    # 1. unhashable params not marked static
+    for ctx in jitted:
+        a = ctx.func.args
+        pos = list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+        pos_defaults = [None] * (len(a.posonlyargs) + len(a.args)
+                                 - len(a.defaults)) \
+            + list(a.defaults) + list(a.kw_defaults)
+        for p, default in zip(pos, pos_defaults):
+            if p.arg not in ctx.traced_params:
+                continue  # already static (argnames/argnums/heuristics)
+            kind = _mutable_annotation(p.annotation)
+            if kind is None and isinstance(default, (ast.Dict, ast.List,
+                                                     ast.Set)):
+                kind = type(default).__name__.lower()
+            if kind is not None:
+                yield src.finding(
+                    RULE, p,
+                    f"jitted '{ctx.func.name}' takes {kind} param "
+                    f"'{p.arg}' outside static_argnames — unhashable jit "
+                    "key forces retraces; mark it static or pass arrays")
+
+    # 2a. immediately-invoked wrapper: jax.jit(f)(x)
+    immediate: Set[int] = set()
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Call) \
+                and _is_jit_ref(node.func.func):
+            immediate.add(id(node.func))
+            yield src.finding(
+                RULE, node,
+                "jax.jit(f)(...) invoked immediately: the wrapper and its "
+                "compile cache are discarded after one call — bind it once "
+                "and reuse it")
+    # 2b. jit wrapper built inside a loop body (deduped across nested
+    # loops and against the immediate-invoke pattern above)
+    in_loop: Set[int] = set()
+    for node in ast.walk(src.tree):
+        if isinstance(node, (ast.For, ast.While)):
+            for sub in ast.walk(node):
+                if sub is not node and isinstance(sub, ast.Call) \
+                        and _is_jit_ref(sub.func):
+                    in_loop.add(id(sub))
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Call) and id(node) in in_loop \
+                and id(node) not in immediate:
+            yield src.finding(
+                RULE, node,
+                "jax.jit called inside a loop body: a fresh wrapper (and "
+                "a fresh trace) per iteration; hoist the jit out of the "
+                "loop")
+
+    # 3. jitted closure over module-level array constants
+    consts = _module_array_constants(src.tree)
+    if consts:
+        for ctx in index.traced_contexts():
+            if ctx.origin.startswith("called from"):
+                continue  # report at the jit/scan boundary, not helpers
+            params = {p.arg for p in (list(ctx.func.args.posonlyargs)
+                                      + list(ctx.func.args.args)
+                                      + list(ctx.func.args.kwonlyargs))}
+            seen: Set[str] = set()
+            for node in ast.walk(ctx.func):
+                if isinstance(node, ast.Name) \
+                        and isinstance(node.ctx, ast.Load) \
+                        and node.id in consts and node.id not in params \
+                        and node.id not in seen:
+                    seen.add(node.id)
+                    yield src.finding(
+                        RULE, node,
+                        f"'{ctx.func.name}' ({ctx.origin}) closes over "
+                        f"module-level array constant '{node.id}' (bound "
+                        f"at line {consts[node.id]}); it is baked into "
+                        "every trace — pass it as an argument",
+                        severity="warning")

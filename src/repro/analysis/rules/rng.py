@@ -1,0 +1,242 @@
+"""RNG-KEY-REUSE: one PRNG key, one consumption.
+
+Every replay-vs-scan parity battery in `tests/test_event_engine.py`
+depends on the per-event split discipline: a key is consumed exactly
+once — by a sampler, by `split`, or by `fold_in` — and any further
+randomness uses a *fresh* subkey. Feeding the same key to two
+consumers yields correlated (often identical) draws, which is exactly
+the class of bug that keeps two engines in spurious agreement.
+
+The rule runs a small flow-ordered state machine per function:
+
+* a *key entity* is a dotted name (``key``, ``state.key``) or a
+  constant-index subscript (``ks[0]``);
+* passing an entity as the first positional argument (or ``key=``
+  keyword) of a `jax.random` consumer marks it consumed;
+* rebinding the entity — ``key, sub = jax.random.split(key)``,
+  ``key = fold_in(key, i)``, or any other assignment — renews it;
+* a second consumption without a renewal is a finding.
+
+``fold_in(key, i)`` does *not* consume: deriving per-iteration streams
+from one base key is the house idiom (see `draco_window`'s 8-way split
+vs the `fold_in` ladders in `launch/train.py` and the test suite).
+
+`if` branches are walked independently (consumed-state unioned, except
+branches that terminate in return/raise — their state never reaches
+the fall-through); loop bodies are walked twice so a loop-carried key
+consumed each iteration without a re-split is caught.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, SourceFile, register_rule
+from repro.analysis.jaxctx import dotted
+
+RULE = "RNG-KEY-REUSE"
+
+# jax.random consumers whose first argument is a key. `fold_in` is
+# deliberately absent: `fold_in(key, i)` *derives* a stream tagged by
+# its data argument and is this repo's idiom for reusing one base key
+# across loop iterations / independent draws — it never collides with
+# a draw from the key itself the way a second sampler call does.
+_CONSUMERS = {
+    "split", "clone",
+    "normal", "uniform", "bernoulli", "randint", "choice", "permutation",
+    "shuffle", "categorical", "gumbel", "exponential", "poisson", "gamma",
+    "beta", "dirichlet", "laplace", "logistic", "cauchy", "t", "rademacher",
+    "truncated_normal", "multivariate_normal", "loggamma", "maxwell",
+    "geometric", "binomial", "ball", "orthogonal", "bits",
+}
+_RANDOM_ROOTS = {"random", "jrandom", "jr"}
+
+Entity = Tuple  # ("state", "key") or ("ks", 3)
+
+
+def _is_random_call(call: ast.Call) -> Optional[str]:
+    """Name of the jax.random consumer/producer, or None."""
+    d = dotted(call.func)
+    if d is None:
+        return None
+    name = d[-1]
+    if name not in _CONSUMERS | {"PRNGKey", "key"}:
+        return None
+    if d[0] in {"np", "numpy", "onp", "scipy", "torch"}:
+        return None  # np.random.* takes data, not keys
+    if len(d) >= 2 and d[-2] in _RANDOM_ROOTS:
+        return name
+    if len(d) == 1 and name in {"PRNGKey", "fold_in"}:
+        return name  # common `from jax.random import PRNGKey, fold_in`
+    return None
+
+
+def _terminates(stmts: List[ast.stmt]) -> bool:
+    return bool(stmts) and isinstance(
+        stmts[-1], (ast.Return, ast.Raise, ast.Break, ast.Continue))
+
+
+def _entity(node: ast.AST) -> Optional[Entity]:
+    d = dotted(node)
+    if d is not None:
+        return d
+    if isinstance(node, ast.Subscript):
+        base = dotted(node.value)
+        idx = node.slice
+        if base is not None and isinstance(idx, ast.Constant) \
+                and isinstance(idx.value, int):
+            return base + (idx.value,)
+    return None
+
+
+class _KeyFlow:
+    def __init__(self) -> None:
+        self.consumed: Dict[Entity, ast.AST] = {}
+        self.findings: List[Tuple[ast.AST, Entity, int]] = []
+
+    # -- state transitions ---------------------------------------------------
+
+    def _renew(self, entity: Entity) -> None:
+        for e in [k for k in self.consumed
+                  if k == entity or k[:len(entity)] == entity]:
+            del self.consumed[e]
+
+    def _consume(self, entity: Entity, node: ast.AST) -> None:
+        prev = self.consumed.get(entity)
+        if prev is not None:
+            self.findings.append((node, entity, prev.lineno))
+        else:
+            self.consumed[entity] = node
+
+    def _key_arg(self, call: ast.Call) -> Optional[ast.AST]:
+        if call.args and not isinstance(call.args[0], ast.Starred):
+            return call.args[0]
+        for kw in call.keywords:
+            if kw.arg == "key":
+                return kw.value
+        return None
+
+    # -- expression walk (in-order, so nested calls consume first) -----------
+
+    def visit_expr(self, node: ast.AST) -> None:
+        if node is None:
+            return
+        if isinstance(node, ast.Call):
+            for arg in node.args:
+                self.visit_expr(arg.value if isinstance(arg, ast.Starred)
+                                else arg)
+            for kw in node.keywords:
+                self.visit_expr(kw.value)
+            name = _is_random_call(node)
+            if name in _CONSUMERS:
+                arg = self._key_arg(node)
+                ent = _entity(arg) if arg is not None else None
+                if ent is not None:
+                    self._consume(ent, node)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return  # separate scope; module-level pass visits defs
+        for child in ast.iter_child_nodes(node):
+            self.visit_expr(child)
+
+    # -- statements ----------------------------------------------------------
+
+    def _bind_target(self, target: ast.AST) -> None:
+        ent = _entity(target)
+        if ent is not None:
+            self._renew(ent)
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind_target(elt.value if isinstance(elt, ast.Starred)
+                                  else elt)
+
+    def visit_block(self, stmts) -> None:
+        for stmt in stmts:
+            self.visit_stmt(stmt)
+
+    def visit_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            self.visit_expr(stmt.value)
+            for t in stmt.targets:
+                self._bind_target(t)
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            if stmt.value is not None:
+                self.visit_expr(stmt.value)
+            self._bind_target(stmt.target)
+        elif isinstance(stmt, ast.If):
+            self.visit_expr(stmt.test)
+            saved = dict(self.consumed)
+            self.visit_block(stmt.body)
+            after_body = dict(self.consumed)
+            self.consumed = dict(saved)
+            self.visit_block(stmt.orelse)
+            # a branch ending in return/raise never reaches the
+            # fall-through: its consumed keys don't leak past the If
+            if stmt.orelse and _terminates(stmt.orelse):
+                self.consumed = dict(saved)
+            if not _terminates(stmt.body):
+                self.consumed.update(after_body)
+        elif isinstance(stmt, (ast.For, ast.While)):
+            if isinstance(stmt, ast.For):
+                self.visit_expr(stmt.iter)
+                self._bind_target(stmt.target)
+            else:
+                self.visit_expr(stmt.test)
+            self.visit_block(stmt.body)  # twice: loop-carried reuse
+            self.visit_block(stmt.body)
+            self.visit_block(stmt.orelse)
+        elif isinstance(stmt, (ast.Return, ast.Expr)):
+            if stmt.value is not None:
+                self.visit_expr(stmt.value)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self.visit_expr(item.context_expr)
+            self.visit_block(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.visit_block(stmt.body)
+            for h in stmt.handlers:
+                self.visit_block(h.body)
+            self.visit_block(stmt.orelse)
+            self.visit_block(stmt.finalbody)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return  # nested defs get their own scope in the module pass
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.stmt):
+                    self.visit_stmt(child)
+                elif isinstance(child, ast.expr):
+                    self.visit_expr(child)
+
+
+@register_rule(
+    RULE,
+    "a jax.random key consumed by two sampling/split calls without an "
+    "intervening split/fold_in renewal (correlated draws)")
+def check_key_reuse(src: SourceFile) -> Iterator[Finding]:
+    if src.tree is None:
+        return
+    funcs = [n for n in ast.walk(src.tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    scopes = [src.tree] + funcs
+    for scope in scopes:
+        flow = _KeyFlow()
+        if isinstance(scope, ast.Module):
+            for stmt in scope.body:
+                if not isinstance(stmt, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef,
+                                         ast.ClassDef)):
+                    flow.visit_stmt(stmt)
+        else:
+            flow.visit_block(scope.body)
+        reported: Set[Tuple[int, Entity]] = set()
+        for node, entity, first_line in flow.findings:
+            k = (node.lineno, entity)
+            if k in reported:
+                continue
+            reported.add(k)
+            name = ".".join(str(p) for p in entity)
+            yield src.finding(
+                RULE, node,
+                f"key '{name}' already consumed at line {first_line}; "
+                "split/fold_in it before drawing again")

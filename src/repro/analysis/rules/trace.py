@@ -1,0 +1,58 @@
+"""TRACED-PY-BRANCH and HOST-SYNC-IN-JIT.
+
+Both rules share one machine: `jaxctx.FunctionIndex` decides which
+functions are traced contexts (direct jit, combinator body, known
+scan-body entry point, or in-module call propagation), and
+`tracedness.TraceWalker` walks each context forward, flagging Python
+control flow ("branch") and device->host pulls ("host-sync") on traced
+values. See those modules for the staticness heuristics that keep the
+false-positive rate near zero on this codebase.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Set, Tuple
+
+from repro.analysis.core import Finding, SourceFile, register_rule
+from repro.analysis.jaxctx import FunctionIndex
+from repro.analysis.tracedness import analyze_function
+
+_BRANCH = "TRACED-PY-BRANCH"
+_SYNC = "HOST-SYNC-IN-JIT"
+
+
+def _hazards(src: SourceFile) -> Iterator[Tuple[str, object, str, str]]:
+    """(kind, node, detail, origin) across every traced context, deduped
+    by (kind, line, col) — nested defs are walked both as closures of
+    their parent and, when scanned, as contexts of their own."""
+    if src.tree is None:
+        return
+    index = FunctionIndex(src.tree)
+    seen: Set[Tuple[str, int, int]] = set()
+    for ctx in index.traced_contexts():
+        walker = analyze_function(ctx.func, ctx.traced_params)
+        for kind, node, detail in walker.hazards:
+            key = (kind, node.lineno, node.col_offset)
+            if key in seen:
+                continue
+            seen.add(key)
+            yield kind, node, detail, ctx.origin
+
+
+@register_rule(
+    _BRANCH,
+    "Python if/while/assert/bool()/ternary on a traced value inside a "
+    "jitted function, scan body, or lax.cond/switch branch")
+def check_traced_branch(src: SourceFile) -> Iterator[Finding]:
+    for kind, node, detail, origin in _hazards(src):
+        if kind == "branch":
+            yield src.finding(_BRANCH, node, f"{detail} [{origin}]")
+
+
+@register_rule(
+    _SYNC,
+    "float()/int()/.item()/.tolist()/np.asarray/print on a traced value "
+    "inside a compiled body (device->host sync)")
+def check_host_sync(src: SourceFile) -> Iterator[Finding]:
+    for kind, node, detail, origin in _hazards(src):
+        if kind == "host-sync":
+            yield src.finding(_SYNC, node, f"{detail} [{origin}]")

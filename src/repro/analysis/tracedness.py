@@ -1,0 +1,282 @@
+"""Forward traced-name propagation through one function body.
+
+Given a function and the set of its traced params (from
+`repro.analysis.jaxctx`), a single in-order pass tracks which local
+names (may) hold traced values and emits *hazard records* along the
+way:
+
+    ("branch",    node, detail)  Python `if`/`while`/`assert`/ternary/
+                                 `bool()` on a traced value — a
+                                 TracerBoolConversionError under jit,
+                                 or worse: silent trace-time
+                                 specialization on one concrete value.
+    ("host-sync", node, detail)  `float()`/`int()`/`.item()`/
+                                 `.tolist()`/`np.asarray`/`print` on a
+                                 traced value — forces a device->host
+                                 transfer (an error inside jit; a
+                                 silent pipeline stall in op-by-op
+                                 code).
+
+The pass is flow-ordered but intentionally simple: loops are walked
+twice (to catch loop-carried tracedness), `if` branches are walked
+independently and their outcomes unioned, and nested `def`s are walked
+with the enclosing traced set added (a closure defined under trace
+captures tracers). Staticness exemptions live in `jaxctx` — see its
+docstring for the full list.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Set, Tuple
+
+from repro.analysis.jaxctx import (
+    STATIC_ATTRS,
+    STRUCTURAL_CALLS,
+    _default_static_params,
+    _param_names,
+    dotted,
+)
+
+_NP_ROOTS = {"np", "numpy", "onp"}
+_HOST_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+
+
+class TraceWalker:
+    def __init__(self, func: ast.FunctionDef, traced_params: Set[str]):
+        self.func = func
+        self.hazards: List[Tuple[str, ast.AST, str]] = []
+        self.calls: List[Tuple[ast.Call, Dict[int, bool]]] = []
+        static = _default_static_params(func)
+        self.traced: Set[str] = set(traced_params) - static
+
+    def run(self) -> "TraceWalker":
+        self.visit_block(self.func.body)
+        return self
+
+    # -- expressions --------------------------------------------------------
+
+    def is_traced(self, node: ast.AST) -> bool:
+        """Does evaluating `node` touch a traced value? (Also records
+        hazards and call-argument tracedness as side effects.)"""
+        if node is None or isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.traced
+        if isinstance(node, ast.Attribute):
+            d = dotted(node)
+            if d is not None:
+                if d[0] not in self.traced:
+                    return False
+                return not any(part in STATIC_ATTRS for part in d[1:])
+            return self.is_traced(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_traced(node.value) | self.is_traced(node.slice)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False  # identity tests are structural
+            t = self.is_traced(node.left)
+            for c in node.comparators:
+                t |= self.is_traced(c)
+            return t
+        if isinstance(node, ast.Call):
+            return self._visit_call(node)
+        if isinstance(node, ast.IfExp):
+            if self.is_traced(node.test):
+                self.hazards.append((
+                    "branch", node.test,
+                    "ternary `a if cond else b` on a traced value"))
+            return self.is_traced(node.body) | self.is_traced(node.orelse)
+        if isinstance(node, ast.Lambda):
+            return False  # a lambda *expression* is a static callable
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            t = False
+            for gen in node.generators:
+                t |= self.is_traced(gen.iter)
+                for cond in gen.ifs:
+                    t |= self.is_traced(cond)
+            if isinstance(node, ast.DictComp):
+                t |= self.is_traced(node.key) | self.is_traced(node.value)
+            else:
+                t |= self.is_traced(node.elt)
+            return t
+        t = False
+        for child in ast.iter_child_nodes(node):
+            t |= self.is_traced(child)
+        return t
+
+    def _visit_call(self, node: ast.Call) -> bool:
+        d = dotted(node.func)
+        name = d[-1] if d else None
+        root = d[0] if d else None
+
+        arg_traced: Dict[int, bool] = {}
+        any_traced = False
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            inner = arg.value if isinstance(arg, ast.Starred) else arg
+            t = self.is_traced(inner)
+            arg_traced[id(arg)] = t
+            any_traced |= t
+        if d is not None and len(d) == 1:
+            self.calls.append((node, arg_traced))
+
+        if name in STRUCTURAL_CALLS and root == name:
+            return False  # isinstance/len/hasattr/...: structural reads
+
+        first = node.args[0] if node.args else None
+        first_traced = first is not None and arg_traced.get(id(first), False)
+        if root == name == "bool" and first_traced:
+            self.hazards.append((
+                "branch", node, "bool() forces a traced value to a Python "
+                "bool (concretization error under jit)"))
+        elif root == name in {"float", "int"} and first_traced:
+            self.hazards.append((
+                "host-sync", node,
+                f"{name}() on a traced value forces a device->host sync"))
+        elif root == name == "print" and any_traced:
+            self.hazards.append((
+                "host-sync", node, "print() on traced values syncs the "
+                "device; use jax.debug.print inside jit"))
+        elif d is not None and len(d) >= 2 and root in _NP_ROOTS \
+                and name in {"asarray", "array"} and first_traced:
+            self.hazards.append((
+                "host-sync", node,
+                f"{root}.{name}() on a traced value pulls it to host "
+                "memory; use jnp inside compiled code"))
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _HOST_SYNC_METHODS \
+                and self.is_traced(node.func.value):
+            self.hazards.append((
+                "host-sync", node,
+                f".{node.func.attr}() on a traced value forces a "
+                "device->host sync"))
+        # a method call on a traced receiver returns a traced value
+        # (x.sum(), state._replace(...)); a bare Name callee does not —
+        # calling `f` doesn't make the result traced unless its args are
+        recv = (not isinstance(node.func, ast.Name)
+                and self.is_traced(node.func))
+        return any_traced | recv
+
+    # -- statements ---------------------------------------------------------
+
+    def visit_block(self, stmts: Iterable[ast.stmt]) -> None:
+        for stmt in stmts:
+            self.visit_stmt(stmt)
+
+    def _assign_target(self, target: ast.AST, traced: bool) -> None:
+        if isinstance(target, ast.Name):
+            if traced:
+                self.traced.add(target.id)
+            else:
+                self.traced.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                inner = elt.value if isinstance(elt, ast.Starred) else elt
+                self._assign_target(inner, traced)
+        # attribute/subscript stores don't (re)bind local names
+
+    def _isinstance_narrowed(self, test: ast.AST) -> Set[str]:
+        """Names proven non-traced inside an `if isinstance(x, ...)` body
+        (conjunctions included)."""
+        names: Set[str] = set()
+        tests = test.values if isinstance(test, ast.BoolOp) \
+            and isinstance(test.op, ast.And) else [test]
+        for t in tests:
+            if isinstance(t, ast.Call):
+                d = dotted(t.func)
+                if d == ("isinstance",) and t.args \
+                        and isinstance(t.args[0], ast.Name):
+                    names.add(t.args[0].id)
+        return names
+
+    def visit_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            t = self.is_traced(stmt.value)
+            for target in stmt.targets:
+                self._assign_target(target, t)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._assign_target(stmt.target, self.is_traced(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            t = self.is_traced(stmt.value)
+            if isinstance(stmt.target, ast.Name):
+                if t:
+                    self.traced.add(stmt.target.id)
+        elif isinstance(stmt, ast.If):
+            if self.is_traced(stmt.test):
+                self.hazards.append((
+                    "branch", stmt.test,
+                    "Python `if` on a traced value (trace-time "
+                    "concretization; use lax.cond / jnp.where)"))
+            narrowed = self._isinstance_narrowed(stmt.test)
+            saved = set(self.traced)
+            self.traced -= narrowed
+            self.visit_block(stmt.body)
+            after_body = set(self.traced)
+            self.traced = set(saved)
+            self.visit_block(stmt.orelse)
+            self.traced |= after_body
+        elif isinstance(stmt, ast.While):
+            if self.is_traced(stmt.test):
+                self.hazards.append((
+                    "branch", stmt.test,
+                    "Python `while` on a traced value (use lax.while_loop)"))
+            self.visit_block(stmt.body)  # twice: loop-carried tracedness
+            self.visit_block(stmt.body)
+            self.visit_block(stmt.orelse)
+        elif isinstance(stmt, ast.For):
+            t = self.is_traced(stmt.iter)
+            self._assign_target(stmt.target, t)
+            self.visit_block(stmt.body)
+            self.visit_block(stmt.body)  # twice: loop-carried tracedness
+            self.visit_block(stmt.orelse)
+        elif isinstance(stmt, ast.Assert):
+            if self.is_traced(stmt.test):
+                self.hazards.append((
+                    "branch", stmt.test,
+                    "`assert` on a traced value (concretization under jit; "
+                    "use checkify or move the check host-side)"))
+            if stmt.msg is not None:
+                self.is_traced(stmt.msg)
+        elif isinstance(stmt, (ast.Return, ast.Expr)):
+            if stmt.value is not None:
+                self.is_traced(stmt.value)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self.is_traced(item.context_expr)
+            self.visit_block(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.visit_block(stmt.body)
+            for h in stmt.handlers:
+                self.visit_block(h.body)
+            self.visit_block(stmt.orelse)
+            self.visit_block(stmt.finalbody)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # a def under trace closes over tracers: walk it with the
+            # enclosing traced set plus its own (non-static) params
+            inner = TraceWalker(stmt, set(_param_names(stmt)))
+            inner.traced |= self.traced
+            inner.run()
+            self.hazards.extend(inner.hazards)
+            self.calls.extend(inner.calls)
+            self.traced.discard(stmt.name)
+        elif isinstance(stmt, (ast.Raise, ast.Delete, ast.Global,
+                               ast.Nonlocal, ast.Pass, ast.Break,
+                               ast.Continue, ast.Import, ast.ImportFrom)):
+            return
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.stmt):
+                    self.visit_stmt(child)
+                elif isinstance(child, ast.expr):
+                    self.is_traced(child)
+
+
+def analyze_function(func: ast.FunctionDef, traced_params: Set[str]
+                     ) -> TraceWalker:
+    return TraceWalker(func, traced_params).run()
+
+
+def traced_names_at_calls(func: ast.FunctionDef, traced_params: Set[str]):
+    """(call, {id(arg) -> traced}) pairs for in-module propagation."""
+    return analyze_function(func, traced_params).calls

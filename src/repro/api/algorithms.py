@@ -11,8 +11,6 @@ from __future__ import annotations
 
 import math
 
-import jax
-import jax.numpy as jnp
 
 from repro.api.algorithm import register_algorithm
 from repro.core import baselines as baselines_lib

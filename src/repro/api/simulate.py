@@ -29,7 +29,6 @@ step, and `scenario="static"` is bit-for-bit the frozen-graph path.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, Dict, NamedTuple, Optional, Union
 
 import jax

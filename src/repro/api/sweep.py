@@ -156,6 +156,7 @@ def _run_sweep(algo, ctx, states, eval_data, num_steps: int, eval_every: int,
     def one_row(_, row):
         ov, sched = row
         ctx_g = ctx
+        # repro-lint: disable-next-line=TRACED-PY-BRANCH(structural: iterating the Overrides NamedTuple and testing `is not None` reads trace-time pytree structure, never traced values)
         if any(f is not None for f in ov):
             ctx_g = ctx_g.replace(overrides=ov)
         if sched is not None:

@@ -6,7 +6,6 @@ sidecar of key order. Restores to host numpy; callers re-shard with
 """
 from __future__ import annotations
 
-import json
 import os
 import re
 import tempfile

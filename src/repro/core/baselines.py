@@ -24,9 +24,8 @@ local optimizer state rides the flat `(N, Dopt)` plane on
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from functools import partial
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +33,7 @@ import jax.numpy as jnp
 from repro.core import channel as channel_lib
 from repro.core.channel import ChannelConfig
 from repro.core.protocol import DracoConfig, _opt_plane, local_step
-from repro.core.topology import adjacency, metropolis, row_stochastic
+from repro.core.topology import adjacency, metropolis
 
 
 class BaselineState(NamedTuple):

@@ -12,7 +12,7 @@ Two views of the same point process:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp

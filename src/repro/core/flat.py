@@ -101,7 +101,7 @@ def ravel_clients(tree, dtype=jnp.float32) -> jax.Array:
 
 
 def unravel_clients(flat: jax.Array, spec: FlatSpec):
-    """(N, Dflat) matrix -> pytree per ``spec`` (leaf dtypes restored)."""
+    """`flat` (N, Dflat) matrix -> pytree per ``spec`` (dtypes restored)."""
     leaves = []
     for shape, dtype, off, size in zip(spec.shapes, spec.dtypes,
                                        spec.offsets, spec.sizes):

@@ -17,7 +17,6 @@ All operate on pytrees whose leaves have a leading client axis N.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

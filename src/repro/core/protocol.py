@@ -58,7 +58,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -272,9 +272,10 @@ def local_step(key, params, grad_mask, cfg, task, data, opt_state, step, *,
     """Dispatch local updates by workload representation.
 
     A bare loss callable (or None task) runs the seed `local_updates`
-    graph unchanged — the exact pre-task compiled path, optimizer plane
-    threaded through untouched. A `repro.tasks.Task` routes through
-    `task_local_updates` (pluggable optimizer, state on the flat plane).
+    graph unchanged — the exact pre-task compiled path, the `opt_state`
+    (N, Dopt) optimizer plane threaded through untouched. A
+    `repro.tasks.Task` routes through `task_local_updates` (pluggable
+    optimizer, state on the flat plane).
     """
     if task is None or not hasattr(task, "loss_fn"):
         return (local_updates(key, params, grad_mask, cfg, task, data, lr=lr),
@@ -385,6 +386,8 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, task, data,
 
     Bit-for-bit equal to `draco_window_legacy` at f32 (the parity suite
     enforces it); see the module docstring for the enqueue/drain design.
+    `q` (N, N) is the row-stochastic mixing matrix, `adj` its boolean
+    adjacency.
     `task` is the workload: a `repro.tasks.Task` (model + data + local
     optimizer, state on the flat plane) or — the legacy shim — a bare
     ``loss(params, x, y)`` callable, which runs the seed plain-SGD graph
@@ -489,7 +492,8 @@ def draco_window(state: DracoState, cfg: DracoConfig, q, adj, task, data,
 
 @partial(jax.jit, static_argnames=("cfg", "task", "num_windows"))
 def run_windows(state, cfg: DracoConfig, q, adj, task, data, num_windows: int):
-    """`task`: a `repro.tasks.Task` or a bare loss callable (legacy)."""
+    """`task`: a `repro.tasks.Task` or a bare loss callable (legacy);
+    `q` (N, N) row-stochastic mixing weights."""
     def step(s, _):
         return draco_window(s, cfg, q, adj, task, data), None
 
@@ -563,7 +567,8 @@ def draco_window_legacy(state: DracoStateLegacy, cfg: DracoConfig, q, adj,
     which predate the fusion), so the parity suite compares two
     independent *gossip engines* rather than one refactor of the other.
     `loss_fn` may be a `repro.tasks.Task` — the oracle for task-layer
-    parity runs (the dispatcher keeps the bare-callable graph verbatim)."""
+    parity runs (the dispatcher keeps the bare-callable graph verbatim).
+    `q` (N, N) is the row-stochastic mixing matrix."""
     n, D = cfg.num_clients, cfg.max_delay_windows
     keys = jax.random.split(state.key, 8)
     k_next, k_grad, k_gsel, k_tx, k_chan, k_psi, k_hub, _ = keys
@@ -657,6 +662,7 @@ def draco_window_legacy(state: DracoStateLegacy, cfg: DracoConfig, q, adj,
 @partial(jax.jit, static_argnames=("cfg", "loss_fn", "num_windows"))
 def run_windows_legacy(state, cfg: DracoConfig, q, adj, loss_fn, data,
                        num_windows: int):
+    """Scan `num_windows` legacy windows; `q` (N, N) row-stochastic."""
     def step(s, _):
         return draco_window_legacy(s, cfg, q, adj, loss_fn, data), None
 

@@ -9,7 +9,6 @@ Also provides deterministic LM token streams for the production trainer.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -39,7 +39,7 @@ so a padded tape equals its unpadded prefix bit-for-bit.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

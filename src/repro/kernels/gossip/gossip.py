@@ -16,7 +16,6 @@ TPU-native blocking rationale:
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +31,7 @@ def _gossip_kernel(q_ref, d_ref, o_ref):
 
 
 def gossip_mix_pallas(q, deltas, *, block_d: int = 512, interpret: bool = False):
-    """q (N, N) f32; deltas (N, D) with D % block_d == 0 (padded by ops)."""
+    """q (N, N) f32; deltas (N, K) with K % block_d == 0 (padded by ops)."""
     n, d_total = deltas.shape
     assert q.shape == (n, n)
     assert d_total % block_d == 0, (d_total, block_d)

@@ -46,7 +46,8 @@ def _pad_to(x, mult, axis):
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def gossip_mix(q, deltas, *, block_d: int = 512, interpret=None):
-    """out = Q^T deltas with TPU-friendly padding. q (N,N), deltas (N,D)."""
+    """out = Q^T @ deltas with TPU-friendly padding; q (N, N) and
+    deltas (N, K) flat updates -> (N, K)."""
     if interpret is None:
         interpret = default_interpret()
     n, d = deltas.shape
@@ -57,6 +58,7 @@ def gossip_mix(q, deltas, *, block_d: int = 512, interpret=None):
 
 
 def gossip_mix_reference(q, deltas):
+    """Pure-jnp oracle: q (N, N), deltas (N, K) -> Q^T @ deltas."""
     return gossip_mix_ref(q, deltas)
 
 

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 def gossip_mix_ref(q, deltas):
     """out[m, :] = sum_n q[n, m] * deltas[n, :].
 
-    q: (N, N) row-stochastic (sender, receiver), deltas: (N, D).
+    q: (N, N) row-stochastic (sender, receiver), deltas: (N, K).
     Accumulation in f32, output in deltas.dtype.
     """
     out = jnp.einsum(

@@ -30,7 +30,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ARCH_ALIASES, ARCH_IDS, SHAPES, get_config
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
 from repro.launch import mesh as mesh_lib
 from repro.launch import steps as steps_lib
 from repro.launch.roofline import Roofline, collective_bytes, model_flops_analytic

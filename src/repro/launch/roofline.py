@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict
 
 PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e-ish)
 HBM_BW = 819e9  # bytes/s

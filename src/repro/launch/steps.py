@@ -16,18 +16,16 @@ KV/SSM cache; prefill a full prompt. Serving uses the *unified* model
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import mixing
 from repro.launch import mesh as mesh_lib
 from repro.models import model as M
-from repro.models.registry import build_model
 from repro.sharding.axes import default_rules, train_rules, use_rules
 from repro.sharding.specs import tree_param_specs
 

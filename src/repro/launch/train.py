@@ -25,11 +25,10 @@ import numpy as np
 
 from repro import checkpoint as ckpt_lib
 from repro.api import make_context
-from repro.configs.base import SHAPES, get_config, get_reduced
+from repro.configs.base import get_config, get_reduced
 from repro.core import mixing
 from repro.core.events import sample_event_masks
 from repro.core.protocol import DracoConfig
-from repro.launch import mesh as mesh_lib
 from repro.launch import steps as steps_lib
 from repro.models import model as M
 

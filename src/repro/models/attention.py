@@ -9,7 +9,7 @@ Shapes convention: activations (B, S, d); heads materialized as
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,6 @@ grouped by the caller). Causal + optional sliding window.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ every group, Zamba2-style). 'cross' attends to stub patch embeddings.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

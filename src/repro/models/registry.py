@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 from repro.configs.base import ModelConfig, get_config, get_reduced
 from repro.models import model as M

@@ -7,8 +7,7 @@ gossip layer can mix them (or not) uniformly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

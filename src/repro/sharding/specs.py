@@ -17,7 +17,7 @@ stack axes (client axis, layer-group axis) are covered by ``prefix``
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -37,7 +37,7 @@ uniform representation; the hot path never wraps.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

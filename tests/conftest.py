@@ -1,4 +1,5 @@
 import os
+import re
 import sys
 
 # Keep the default 1-CPU-device view for smoke tests; mesh/dry-run tests
@@ -12,3 +13,28 @@ import pytest
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
+
+
+# ROADMAP tiering: battery files (parity/mesh/theory/property/system/
+# dryrun) and hypothesis tests must be marked slow, or tier-1's ~2-min
+# budget erodes as the suite grows. The static side of this check is
+# repro.analysis's MARKER-DISCIPLINE rule; this hook enforces it at
+# collection time too (it sees dynamically generated tests the AST
+# can't).
+_BATTERY_FILE = re.compile(r"test_.*(parity|mesh|theory|property|system|dryrun)")
+
+
+def pytest_collection_modifyitems(config, items):
+    offenders = []
+    for item in items:
+        if item.get_closest_marker("slow") is not None:
+            continue
+        fname = os.path.basename(str(item.fspath))
+        if _BATTERY_FILE.match(fname):
+            offenders.append(f"{item.nodeid} (battery file {fname})")
+        elif item.get_closest_marker("hypothesis") is not None:
+            offenders.append(f"{item.nodeid} (hypothesis test)")
+    if offenders:
+        raise pytest.UsageError(
+            "tests missing @pytest.mark.slow (ROADMAP tiering):\n  "
+            + "\n  ".join(offenders))

@@ -1,0 +1,453 @@
+"""Fixture corpus for `repro.analysis`: per rule, at least one minimal
+known-bad snippet (asserting the exact rule id and line) and one
+known-good snippet, plus the suppression grammar (reasoned suppressions
+silence; bare ones are rejected and do not silence).
+
+Pure stdlib — the analyzer never imports jax, so this battery stays in
+tier-1.
+"""
+import textwrap
+
+from repro.analysis import RULES, analyze_paths, report_json
+from repro.analysis.core import SUPPRESS_NO_REASON, analyze_file
+
+
+def run(text, path="src/repro/mod.py", rule=None):
+    rules = [RULES[rule]] if rule else None
+    return analyze_file(path, rules=rules, text=textwrap.dedent(text))
+
+
+def lines_of(findings, rule):
+    return [f.line for f in findings if f.rule == rule]
+
+
+# -- RNG-KEY-REUSE -----------------------------------------------------------
+
+def test_rng_key_reuse_bad():
+    findings = run(
+        """\
+        import jax
+
+        def f(key):
+            a = jax.random.normal(key, (3,))
+            b = jax.random.uniform(key, (3,))
+            return a + b
+        """, rule="RNG-KEY-REUSE")
+    assert lines_of(findings, "RNG-KEY-REUSE") == [5]
+
+
+def test_rng_split_reuse_bad():
+    # consuming a key with split and then sampling from it is the
+    # classic replay-correlation bug
+    findings = run(
+        """\
+        import jax
+
+        def f(key):
+            ks = jax.random.split(key, 4)
+            return jax.random.normal(key, (3,)), ks
+        """, rule="RNG-KEY-REUSE")
+    assert lines_of(findings, "RNG-KEY-REUSE") == [5]
+
+
+def test_rng_loop_carried_reuse_bad():
+    findings = run(
+        """\
+        import jax
+
+        def f(key, xs):
+            out = []
+            for x in xs:
+                out.append(jax.random.normal(key, (3,)) + x)
+            return out
+        """, rule="RNG-KEY-REUSE")
+    assert lines_of(findings, "RNG-KEY-REUSE") == [6]
+
+
+def test_rng_split_discipline_good():
+    findings = run(
+        """\
+        import jax
+
+        def f(key):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (3,))
+            b = jax.random.uniform(k2, (3,))
+            return a + b
+        """, rule="RNG-KEY-REUSE")
+    assert findings == []
+
+
+def test_rng_fold_in_idiom_good():
+    # fold_in derives fresh streams; it neither consumes nor collides
+    findings = run(
+        """\
+        import jax
+
+        def f(key, xs):
+            base = jax.random.normal(key, (3,))
+            outs = [jax.random.normal(jax.random.fold_in(key, i), (3,))
+                    for i in range(3)]
+            return base, outs
+        """, rule="RNG-KEY-REUSE")
+    assert findings == []
+
+
+def test_rng_early_return_branches_good():
+    findings = run(
+        """\
+        import jax
+
+        def f(key, flag):
+            if flag:
+                a, b = jax.random.split(key)
+                return a, b
+            a, b, c = jax.random.split(key, 3)
+            return a, c
+        """, rule="RNG-KEY-REUSE")
+    assert findings == []
+
+
+# -- TRACED-PY-BRANCH --------------------------------------------------------
+
+def test_traced_branch_bad():
+    findings = run(
+        """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """, rule="TRACED-PY-BRANCH")
+    assert lines_of(findings, "TRACED-PY-BRANCH") == [5]
+
+
+def test_traced_branch_scan_body_bad():
+    findings = run(
+        """\
+        import jax
+
+        def body(carry, x):
+            while carry > 0:
+                carry = carry - x
+            return carry, x
+
+        def run(c0, xs):
+            return jax.lax.scan(body, c0, xs)
+        """, rule="TRACED-PY-BRANCH")
+    assert lines_of(findings, "TRACED-PY-BRANCH") == [4]
+
+
+def test_traced_branch_static_param_good():
+    # cfg-named params, literal-default knobs, shape reads and
+    # isinstance narrowing are all static — no findings
+    findings = run(
+        """\
+        import jax
+
+        @jax.jit
+        def f(x, cfg, n: int = 4):
+            if cfg.debug:
+                return x * n
+            if x.ndim > 1:
+                x = x.sum(0)
+            if isinstance(x, tuple):
+                x = x[0]
+            return x
+        """, rule="TRACED-PY-BRANCH")
+    assert findings == []
+
+
+def test_traced_branch_static_argnames_good():
+    findings = run(
+        """\
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnames=("mode",))
+        def f(x, mode):
+            if mode == "fast":
+                return x
+            return x * 2
+        """, rule="TRACED-PY-BRANCH")
+    assert findings == []
+
+
+# -- HOST-SYNC-IN-JIT --------------------------------------------------------
+
+def test_host_sync_bad():
+    findings = run(
+        """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            print(x)
+            return float(x.sum())
+        """, rule="HOST-SYNC-IN-JIT")
+    assert lines_of(findings, "HOST-SYNC-IN-JIT") == [5, 6]
+
+
+def test_host_sync_item_bad():
+    findings = run(
+        """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            y = x.sum()
+            return y.item()
+        """, rule="HOST-SYNC-IN-JIT")
+    assert lines_of(findings, "HOST-SYNC-IN-JIT") == [6]
+
+
+def test_host_sync_outside_jit_good():
+    findings = run(
+        """\
+        import numpy as np
+
+        def report(x):
+            print(x)
+            return float(np.asarray(x).sum())
+        """, rule="HOST-SYNC-IN-JIT")
+    assert findings == []
+
+
+# -- JIT-RECOMPILE-HAZARD ----------------------------------------------------
+
+def test_jit_dict_param_bad():
+    findings = run(
+        """\
+        import jax
+
+        @jax.jit
+        def f(table: dict, x):
+            return table["w"] + x
+        """, rule="JIT-RECOMPILE-HAZARD")
+    assert lines_of(findings, "JIT-RECOMPILE-HAZARD") == [4]
+
+
+def test_jit_immediate_invoke_bad():
+    findings = run(
+        """\
+        import jax
+
+        def f(x):
+            return jax.jit(lambda a: a + 1)(x)
+        """, rule="JIT-RECOMPILE-HAZARD")
+    assert lines_of(findings, "JIT-RECOMPILE-HAZARD") == [4]
+
+
+def test_jit_in_loop_bad():
+    findings = run(
+        """\
+        import jax
+
+        def f(xs, g):
+            out = []
+            for x in xs:
+                step = jax.jit(g)
+                out.append(step(x))
+            return out
+        """, rule="JIT-RECOMPILE-HAZARD")
+    assert lines_of(findings, "JIT-RECOMPILE-HAZARD") == [6]
+
+
+def test_jit_static_argnames_dict_good():
+    findings = run(
+        """\
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnames=("table",))
+        def f(table: dict, x):
+            return x
+
+        def outer(g, x):
+            step = jax.jit(g)
+            return step(x), step(x)
+        """, rule="JIT-RECOMPILE-HAZARD")
+    assert findings == []
+
+
+# -- DTYPE-PLANE-CONTRACT ----------------------------------------------------
+
+def test_plane_contract_mismatch_bad():
+    findings = run(
+        """\
+        def mix(q, flat):
+            \"\"\"q (N, N) weights, flat (N, D) updates.\"\"\"
+            return q.T @ flat
+        """, path="src/repro/core/flat.py", rule="DTYPE-PLANE-CONTRACT")
+    assert lines_of(findings, "DTYPE-PLANE-CONTRACT") == [1]
+    assert "(N,D)" in findings[0].message
+
+
+def test_plane_contract_missing_docstring_bad():
+    findings = run(
+        """\
+        def drain(w_ring, buffer):
+            return (w_ring, buffer)
+        """, path="src/repro/events/engine.py", rule="DTYPE-PLANE-CONTRACT")
+    assert lines_of(findings, "DTYPE-PLANE-CONTRACT") == [1]
+
+
+def test_plane_contract_good():
+    findings = run(
+        """\
+        def mix(q, flat):
+            \"\"\"q (N, N) row-stochastic, flat (N, Dflat) updates.\"\"\"
+            return q.T @ flat
+
+        def _private(flat):
+            return flat
+
+        def no_planes(x, y):
+            return x + y
+        """, path="src/repro/core/flat.py", rule="DTYPE-PLANE-CONTRACT")
+    assert findings == []
+
+
+def test_plane_contract_out_of_scope_good():
+    findings = run(
+        """\
+        def mix(q, flat):
+            return q.T @ flat
+        """, path="src/repro/api/simulate.py", rule="DTYPE-PLANE-CONTRACT")
+    assert findings == []
+
+
+# -- MARKER-DISCIPLINE -------------------------------------------------------
+
+def test_marker_battery_file_bad():
+    findings = run(
+        """\
+        import pytest
+
+        def test_engines_agree():
+            assert True
+        """, path="tests/test_foo_parity.py", rule="MARKER-DISCIPLINE")
+    assert lines_of(findings, "MARKER-DISCIPLINE") == [3]
+
+
+def test_marker_hypothesis_bad():
+    findings = run(
+        """\
+        from hypothesis import given, strategies as st
+
+        @given(n=st.integers(1, 9))
+        def test_fuzz(n):
+            assert n > 0
+        """, path="tests/test_foo.py", rule="MARKER-DISCIPLINE")
+    # findings anchor to the `def` line, below the @given decorator
+    assert lines_of(findings, "MARKER-DISCIPLINE") == [4]
+
+
+def test_marker_module_pytestmark_good():
+    findings = run(
+        """\
+        import pytest
+
+        pytestmark = pytest.mark.slow
+
+        def test_engines_agree():
+            assert True
+        """, path="tests/test_foo_parity.py", rule="MARKER-DISCIPLINE")
+    assert findings == []
+
+
+def test_marker_decorated_good():
+    findings = run(
+        """\
+        import pytest
+        from hypothesis import given, strategies as st
+
+        @pytest.mark.slow
+        @given(n=st.integers(1, 9))
+        def test_fuzz(n):
+            assert n > 0
+        """, path="tests/test_foo.py", rule="MARKER-DISCIPLINE")
+    assert findings == []
+
+
+# -- suppressions ------------------------------------------------------------
+
+_REUSE = """\
+import jax
+
+def f(key):
+    a = jax.random.normal(key, (3,))
+    {comment}
+    b = jax.random.uniform(key, (3,))
+    return a + b
+"""
+
+
+def test_suppression_with_reason_silences():
+    text = _REUSE.format(
+        comment="# repro-lint: disable=RNG-KEY-REUSE(correlated streams "
+                "are the point of this fixture)")
+    findings = run(text, rule="RNG-KEY-REUSE")
+    assert findings == []
+
+
+def test_suppression_without_reason_rejected():
+    text = _REUSE.format(comment="# repro-lint: disable=RNG-KEY-REUSE")
+    findings = run(text, rule="RNG-KEY-REUSE")
+    # the bare suppression is itself a finding, and it does NOT silence
+    assert lines_of(findings, SUPPRESS_NO_REASON) == [5]
+    assert lines_of(findings, "RNG-KEY-REUSE") == [6]
+
+
+def test_suppression_trailing_comment_same_line():
+    findings = run(
+        """\
+        import jax
+
+        def f(key):
+            a = jax.random.normal(key, (3,))
+            b = jax.random.uniform(key, (3,))  # repro-lint: disable=RNG-KEY-REUSE(same-stream comparison on purpose)
+            return a + b
+        """, rule="RNG-KEY-REUSE")
+    assert findings == []
+
+
+def test_suppression_wrong_rule_does_not_silence():
+    text = _REUSE.format(
+        comment="# repro-lint: disable=TRACED-PY-BRANCH(unrelated rule)")
+    findings = run(text, rule="RNG-KEY-REUSE")
+    assert lines_of(findings, "RNG-KEY-REUSE") == [6]
+
+
+# -- engine plumbing ---------------------------------------------------------
+
+def test_all_rules_registered():
+    assert {"RNG-KEY-REUSE", "TRACED-PY-BRANCH", "HOST-SYNC-IN-JIT",
+            "JIT-RECOMPILE-HAZARD", "DTYPE-PLANE-CONTRACT",
+            "MARKER-DISCIPLINE"} <= set(RULES)
+
+
+def test_parse_error_reported_not_crashed():
+    findings = run("def broken(:\n    pass\n")
+    assert [f.rule for f in findings] == ["PARSE-ERROR"]
+
+
+def test_json_report_shape():
+    import json
+
+    findings = run(_REUSE.format(comment="pass"), rule="RNG-KEY-REUSE")
+    payload = json.loads(report_json(findings, files_scanned=1))
+    assert payload["version"] == 1
+    assert payload["files_scanned"] == 1
+    assert payload["counts"] == {"RNG-KEY-REUSE": 1}
+    f = payload["findings"][0]
+    assert f["rule"] == "RNG-KEY-REUSE" and f["path"] == "src/repro/mod.py"
+
+
+def test_repo_tree_is_clean():
+    """The committed tree must stay lint-clean (the CI gate)."""
+    findings, files = analyze_paths(["src", "tests"])
+    assert files > 0
+    assert [f.format() for f in findings] == []

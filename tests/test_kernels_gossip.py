@@ -31,6 +31,7 @@ def test_kernel_matches_oracle(shape, dtype):
         atol=tol, rtol=tol)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(n=st.integers(2, 24), d=st.integers(1, 300), seed=st.integers(0, 2**16))
 def test_kernel_property_random(n, d, seed):

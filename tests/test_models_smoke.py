@@ -15,12 +15,13 @@ def _batch(cfg, key, B=2, S=32):
     batch = {}
     if cfg.embeds_in:
         batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model))
-        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        batch["labels"] = jax.random.randint(
+            jax.random.fold_in(key, 1), (B, S), 0, cfg.vocab_size)
     else:
         batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
     if cfg.family == "vlm":
         batch["cross_embeds"] = jax.random.normal(
-            key, (B, cfg.num_patch_tokens, cfg.d_model))
+            jax.random.fold_in(key, 2), (B, cfg.num_patch_tokens, cfg.d_model))
     return batch
 
 
@@ -59,8 +60,8 @@ def test_decode_step(arch):
     if cfg.family == "vlm":
         pe = jax.random.normal(key, (B, cfg.num_patch_tokens, cfg.d_model))
         cross_kv = m.init_cross_kv(params, pe)
-    tok = (jax.random.normal(key, (B, 1, cfg.d_model)) if cfg.embeds_in
-           else jnp.zeros((B,), jnp.int32))
+    tok = (jax.random.normal(jax.random.fold_in(key, 1), (B, 1, cfg.d_model))
+           if cfg.embeds_in else jnp.zeros((B,), jnp.int32))
     for _ in range(3):
         logits, st = m.decode_step(params, tok, st, cross_kv)
         assert logits.shape == (B, cfg.vocab_size)

@@ -1,5 +1,4 @@
 """DRACO protocol behaviour tests (the paper's Algorithm 1/2 invariants)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ addition order the seed ring buffer used; anything weaker than
 `assert_array_equal` here would hide a reordering bug.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -141,7 +140,8 @@ def test_fused_buffer_holds_raw_payload_ring(task):
     q, adj = build_graph(cfg)
     key = jax.random.PRNGKey(4)
     s0 = init_state(key, cfg, params0)
-    s1 = jax.jit(lambda s: draco_window(s, cfg, q, adj, loss, train))(s0)
+    step = jax.jit(lambda s: draco_window(s, cfg, q, adj, loss, train))
+    s1 = step(s0)
     # slot 0 now holds window 0's broadcast payload = pending before the
     # post-send clear; with lambda_tx huge, pending after the clear is 0,
     # so reconstruct it from the drain that window 1 will apply.
@@ -154,7 +154,7 @@ def test_fused_buffer_holds_raw_payload_ring(task):
     w0 = np.asarray(s1.w_ring[0])
     assert (w0 >= 0).all() and np.abs(w0).sum() > 0
     # the drain of window 1 delivers exactly w0^T @ payload
-    s2 = jax.jit(lambda s: draco_window(s, cfg, q, adj, loss, train))(s1)
+    s2 = step(s1)
     # (unify off; self-update off: params change only via arrivals)
     got = _flat(s2.params) - _flat(s1.params)
     want = w0.T @ payload

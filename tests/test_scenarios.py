@@ -62,7 +62,8 @@ def test_schedule_at_traceable():
     cfg = _cfg()
     sched = make_schedule("markov-edge-flip", cfg, key=jax.random.PRNGKey(1),
                           steps=4)
-    q3 = jax.jit(lambda s, t: s.at(t).q)(sched, jnp.int32(3))
+    q_at = jax.jit(lambda s, t: s.at(t).q)
+    q3 = q_at(sched, jnp.int32(3))
     np.testing.assert_array_equal(np.asarray(q3), np.asarray(sched.q[3]))
 
 

@@ -1,9 +1,7 @@
-import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding.axes import AxisRules, constrain, use_rules
+from repro.sharding.axes import constrain
 from repro.sharding.specs import filter_divisible, param_spec, tree_param_specs
 
 

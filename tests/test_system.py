@@ -1,9 +1,6 @@
 """End-to-end behaviour tests for the full DRACO system."""
-import subprocess
-import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

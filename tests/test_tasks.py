@@ -23,7 +23,7 @@ from repro.core.protocol import (
     run_windows,
     run_windows_legacy,
 )
-from repro.tasks import Task, as_task, get_task, is_task, list_tasks, opt_width
+from repro.tasks import as_task, get_task, is_task, list_tasks, opt_width
 from repro.tasks.base import loss_of
 
 N = 5

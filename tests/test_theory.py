@@ -8,7 +8,6 @@ claims the bound encodes on a controllable strongly-convex problem:
        messages) does not hurt, tiny Psi slows convergence;
   (iii) client variance stays bounded (the unification term's job).
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +15,6 @@ import numpy as np
 import pytest
 
 from repro.core.protocol import DracoConfig, build_graph, init_state, run_windows
-from repro.core.topology import adjacency
 
 # tier-2: multi-hundred-window convergence-theory runs (ROADMAP tier-1
 # runs -m "not slow")
